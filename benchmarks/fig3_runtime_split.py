@@ -1,0 +1,57 @@
+"""Paper Fig. 3: share of each GCN layer's runtime spent in the first
+(combination) vs second (aggregation) matmul step.
+
+Primary: op-count model (hardware-neutral, matches the paper's systolic
+setting).  Secondary: measured numpy wall-times on this CPU (documented as
+indicative only — np.add.at scatter is far from an accelerator's SpMM).
+The paper's claim: the first step dominates (>90 % for PubMed/Nell), making
+GCN-ABFT's end-of-layer detection latency negligible.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+
+def run(csv: List[str]) -> None:
+    from repro.core.datasets import STATS, make_dataset
+    from repro.core.fault import glorot_weights
+    from repro.core.opcount import gcn_layer_shapes
+
+    print("\n=== Fig. 3: combination vs aggregation runtime share ===")
+    print(f"{'GCN':9s} {'L1 comb%':>9s} {'L2 comb%':>9s} {'total comb%':>11s}"
+          f"  (op-count model | measured)")
+    for name in STATS:
+        st = STATS[name]
+        shapes = gcn_layer_shapes(st)
+        comb = [2 * ls.nnz_h * ls.g for ls in shapes]
+        agg = [2 * ls.nnz_s * ls.g for ls in shapes]
+        model_pct = [100 * c / (c + a) for c, a in zip(comb, agg)]
+        model_tot = 100 * sum(comb) / (sum(comb) + sum(agg))
+
+        # measured (small datasets only — nell's dense L2 is fine, its
+        # scatter-based agg is the slow path on CPU)
+        ds = make_dataset(name, seed=0)
+        ws = glorot_weights(st.layer_dims, seed=0)
+        t = {}
+        h0 = ds.features
+        t0 = time.perf_counter(); x1 = h0.matmul_dense(ws[0]); t["c1"] = time.perf_counter() - t0
+        t0 = time.perf_counter(); a1 = ds.s.matmul_dense(x1); t["a1"] = time.perf_counter() - t0
+        h1 = np.maximum(a1, 0)
+        t0 = time.perf_counter(); x2 = h1 @ ws[1]; t["c2"] = time.perf_counter() - t0
+        t0 = time.perf_counter(); ds.s.matmul_dense(x2); t["a2"] = time.perf_counter() - t0
+        meas = [100 * t["c1"] / (t["c1"] + t["a1"]),
+                100 * t["c2"] / (t["c2"] + t["a2"])]
+        meas_tot = 100 * (t["c1"] + t["c2"]) / sum(t.values())
+        print(f"{name:9s} {model_pct[0]:8.1f}% {model_pct[1]:8.1f}% "
+              f"{model_tot:10.1f}%  | measured {meas[0]:5.1f}% {meas[1]:5.1f}% "
+              f"tot {meas_tot:5.1f}%")
+        csv.append(f"fig3_{name}_comb_share_pct,"
+                   f"{sum(t.values())*1e6:.1f},{model_tot:.2f}")
+
+
+if __name__ == "__main__":
+    out: List[str] = []
+    run(out)

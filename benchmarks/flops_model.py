@@ -1,0 +1,294 @@
+"""Analytic FLOPs / HBM-bytes model, op-by-op mirroring the model code.
+
+Why analytic: XLA's HloCostAnalysis counts while(scan) bodies ONCE (verified
+in EXPERIMENTS.md §Roofline-methodology with a scan-vs-unroll probe), so
+compiled cost_analysis() under-counts layer-scanned/chunk-scanned graphs by
+the trip count.  This model counts exactly what the implementation executes
+— including the masked-out half of causal scores (the chunked streaming
+softmax computes full T×S score blocks), ABFT check arithmetic per mode,
+and the remat recompute factor — and is validated against XLA counts on
+unrolled configs (tests/test_flops_model.py).
+
+Conventions: 1 MAC = 2 FLOPs; bytes = Σ over matmul-class ops of
+(inputs + outputs) × dtype-width (an upper bound on HBM traffic — fusion
+reduces it; the compute/memory/collective comparison is unaffected).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+BF16 = 2
+F32 = 4
+
+
+@dataclasses.dataclass
+class Counter:
+    flops: float = 0.0
+    bytes: float = 0.0
+
+    def matmul(self, m, k, n, dt_in=BF16, dt_out=BF16):
+        self.flops += 2.0 * m * k * n
+        self.bytes += (m * k + k * n) * dt_in + m * n * dt_out
+
+    def ew(self, n, reads=1, writes=1, dt=BF16, flops_per=1.0):
+        self.flops += n * flops_per
+        self.bytes += n * (reads + writes) * dt
+
+
+def _attn_layer(c: Counter, cfg: ModelConfig, tok: int, s_ctx: int,
+                abft: str, decode: bool):
+    """tok = query tokens (B*T); s_ctx = key/value context length per query
+    row-block (the chunked implementation computes ALL chunks)."""
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    c.matmul(tok, d, h * hd)                      # wq
+    c.matmul(tok, d, kh * hd)                     # wk
+    c.matmul(tok, d, kh * hd)                     # wv
+    b_rows = tok                                   # q rows across batch
+    c.matmul(b_rows * h, hd, s_ctx)               # scores  QK^T
+    c.ew(b_rows * h * s_ctx, flops_per=6)         # mask+exp+corr
+    c.matmul(b_rows * h, s_ctx, hd)               # A V
+    c.matmul(tok, h * hd, d)                      # wo
+    if abft == "fused":
+        c.matmul(b_rows * h, s_ctx, 1)            # extra column A·vr
+        # vr = V·w_or: incremental in decode (new token only — the vr cache,
+        # §Perf hillclimb 3); full sequence otherwise
+        c.matmul(tok, kh * hd, h)
+        c.ew(tok * d, flops_per=1, writes=0)      # actual sum
+    elif abft == "split":
+        c.matmul(b_rows * h, hd, s_ctx)           # SECOND score pass (eᵀA)
+        c.ew(b_rows * h * s_ctx, flops_per=4)
+        c.ew((s_ctx if decode else tok) * kh * hd, flops_per=1)   # V e
+        # per-projection split checks
+        for (mm, kk, nn) in ((tok, d, h * hd), (tok, d, kh * hd),
+                             (tok, d, kh * hd), (tok, h * hd, d)):
+            c.ew(mm * kk // kk + kk * nn // nn, flops_per=1)  # colsum+rowsum
+            c.ew(mm * nn, flops_per=1, writes=0)              # actual sum
+    if abft != "none":
+        pass                                       # qkv check colsums (small)
+
+
+def _mlp(c: Counter, cfg: ModelConfig, tok: int, d_ff: int, abft: str):
+    d = cfg.d_model
+    gated = cfg.mlp_act in ("swiglu", "geglu")
+    c.matmul(tok, d, d_ff)
+    if gated:
+        c.matmul(tok, d, d_ff)
+    c.ew(tok * d_ff, flops_per=4)
+    c.matmul(tok, d_ff, d)
+    if abft != "none":
+        n_mm = 3 if gated else 2
+        c.ew(n_mm * tok * d_ff, flops_per=1, writes=0)   # actual sums
+        c.ew(n_mm * (d + d_ff), flops_per=2)              # pred contractions
+
+
+def _moe(c: Counter, cfg: ModelConfig, tok: int, abft: str):
+    mc = cfg.moe
+    d = cfg.d_model
+    cap = max(int(tok * mc.top_k * mc.capacity_factor / mc.n_experts),
+              mc.top_k)
+    ec = mc.n_experts * cap
+    c.matmul(tok, d, mc.n_experts)                 # router
+    c.ew(tok * mc.n_experts, flops_per=8)          # softmax/topk/cumsum
+    c.ew(ec * d, reads=2, writes=1)                # dispatch scatter
+    c.matmul(ec, d, mc.d_ff_expert)                # up
+    c.matmul(ec, d, mc.d_ff_expert)                # gate
+    c.ew(ec * mc.d_ff_expert, flops_per=4)
+    c.matmul(ec, mc.d_ff_expert, d)                # down
+    c.ew(tok * mc.top_k * d, reads=2, writes=1)    # combine gather
+    if abft == "fused":
+        c.matmul(ec, mc.d_ff_expert, 1)            # z_extra column
+        c.ew(tok * mc.top_k + tok * d, flops_per=1, writes=0)
+    elif abft == "split":
+        c.ew(2 * ec * mc.d_ff_expert, flops_per=1, writes=0)  # G sums ×2
+        c.ew(ec * d, flops_per=1, writes=0)        # sum(Z)
+        c.ew(tok * mc.top_k * d, flops_per=1, writes=0)
+    if mc.n_shared:
+        _mlp(c, cfg, tok, mc.d_ff_shared or mc.n_shared * mc.d_ff_expert,
+             abft)
+
+
+def _rwkv_layer(c: Counter, cfg: ModelConfig, tok: int, abft: str):
+    d = cfg.d_model
+    r_lora = 32
+    c.matmul(tok, d, 5 * r_lora)                   # ddlerp lora A
+    c.matmul(tok * 5, r_lora, d)                   # ddlerp lora B
+    for _ in range(5):
+        c.matmul(tok, d, d)                        # wr wk wv wg wo
+    c.matmul(tok, d, r_lora)                       # decay lora
+    c.matmul(tok, r_lora, d)
+    hd = 64
+    heads = d // hd
+    c.ew(tok * heads * hd * hd, flops_per=6, reads=2, writes=1, dt=F32)  # wkv
+    c.ew(tok * d, flops_per=10)                    # groupnorm+gates
+    c.matmul(tok, d, cfg.d_ff)                     # channel mix
+    c.ew(tok * cfg.d_ff, flops_per=3)
+    c.matmul(tok, cfg.d_ff, d)
+    if abft != "none":
+        c.ew(7 * tok * d, flops_per=1, writes=0)
+
+
+def _rglru_layer(c: Counter, cfg: ModelConfig, tok: int, abft: str):
+    d = cfg.d_model
+    dr = cfg.rglru_d or d
+    c.matmul(tok, d, dr)                           # proj_x
+    c.matmul(tok, d, dr)                           # proj_gate
+    c.ew(tok * dr * cfg.conv1d_width, flops_per=2)  # conv1d
+    gb = 16                                        # block-diagonal gates
+    c.matmul(tok, dr, dr // gb)                    # gate_x (Griffin blocks)
+    c.matmul(tok, dr, dr // gb)                    # gate_a
+    c.ew(tok * dr, flops_per=12, dt=F32)           # gates + recurrence
+    c.matmul(tok, dr, d)                           # proj_out
+    _mlp(c, cfg, tok, cfg.d_ff, abft)
+    if abft != "none":
+        c.ew(5 * tok * dr, flops_per=1, writes=0)
+
+
+def count_step(cfg: ModelConfig, shape: ShapeConfig, abft: str = "fused"
+               ) -> Dict[str, float]:
+    """Global FLOPs/bytes for one step of the given cell."""
+    c = Counter()
+    b = shape.global_batch
+    if shape.kind == "decode":
+        tok = b                                     # one token per sequence
+        t_q = 1
+    else:
+        tok = b * shape.seq_len
+        t_q = shape.seq_len
+
+    # context length per attention row (chunked impl computes all chunks)
+    def ctx(window):
+        s = shape.seq_len
+        if shape.kind == "decode":
+            return min(window, s) if window else s
+        return min(window + cfg.attn_chunk, s) if window else s
+
+    # embeddings (gather) + lm head
+    c.ew(tok * cfg.d_model, reads=1, writes=1)
+    for i in range(cfg.n_layers):
+        bt = cfg.block_type(i)
+        if bt == "attn":
+            w = cfg.window if len(cfg.block_pattern) == 1 else cfg.local_window
+            _attn_layer(c, cfg, tok, ctx(w), abft,
+                        decode=shape.kind == "decode")
+            if cfg.moe is not None:
+                _moe(c, cfg, tok, abft)
+            else:
+                _mlp(c, cfg, tok, cfg.d_ff, abft)
+        elif bt == "rwkv":
+            _rwkv_layer(c, cfg, tok, abft)
+        else:
+            _rglru_layer(c, cfg, tok, abft)
+        c.ew(tok * cfg.d_model * 2, flops_per=6)    # 2 norms + residuals
+    if cfg.family == "encdec":
+        # encoder over src + cross attention inside decoder layers
+        enc_tok = b * shape.seq_len if shape.kind != "decode" else \
+            b * shape.seq_len        # static encoder context
+        for _ in range(cfg.enc_layers):
+            if shape.kind != "decode":
+                _attn_layer(c, cfg, enc_tok, shape.seq_len, abft, False)
+                _mlp(c, cfg, enc_tok, cfg.d_ff, abft)
+        for _ in range(cfg.n_layers):
+            _attn_layer(c, cfg, tok, shape.seq_len, abft,
+                        decode=shape.kind == "decode")
+    c.matmul(tok, cfg.d_model, cfg.vocab_size, dt_out=F32)   # lm head
+    if abft != "none":
+        c.ew(tok * cfg.vocab_size, flops_per=1, writes=0, dt=F32)
+
+    fwd_flops, fwd_bytes = c.flops, c.bytes
+    if shape.kind == "train":
+        mult = 3.0 + (1.0 if cfg.remat else 0.0)    # fwd + bwd(2×) + remat
+        flops = fwd_flops * mult
+        bytes_ = fwd_bytes * mult
+        n_params = param_count(cfg)
+        flops += 10.0 * n_params                    # adam elementwise
+        bytes_ += n_params * (4 * F32 + 2 * 3 * F32)  # grads + m/v/param rw
+    else:
+        flops, bytes_ = fwd_flops, fwd_bytes
+        if shape.kind == "decode":
+            bytes_ += kv_cache_bytes(cfg, shape)    # cache streaming read
+
+    return {"flops": flops, "bytes": bytes_,
+            "model_flops": model_flops(cfg, shape),
+            "params": param_count(cfg)}
+
+
+def kv_cache_bytes(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    total = 0.0
+    for i in range(cfg.n_layers):
+        bt = cfg.block_type(i)
+        if bt == "attn":
+            w = cfg.window if len(cfg.block_pattern) == 1 else cfg.local_window
+            length = min(w, shape.seq_len) if w else shape.seq_len
+            total += shape.global_batch * length * cfg.n_kv_heads * cfg.hd \
+                * 2 * BF16
+        elif bt == "rwkv":
+            total += shape.global_batch * (cfg.d_model // 64) * 64 * 64 * F32
+        else:
+            total += shape.global_batch * (cfg.rglru_d or cfg.d_model) * F32
+    return total
+
+
+def param_count(cfg: ModelConfig) -> float:
+    d, hd = cfg.d_model, cfg.hd
+    v = cfg.padded_vocab                            # tables are mesh-padded
+    n = v * d                                       # embed
+    if not cfg.tie_embeddings:
+        n += d * v
+    for i in range(cfg.n_layers):
+        bt = cfg.block_type(i)
+        if bt == "attn":
+            n += d * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+            n += cfg.n_heads * hd * d
+            if cfg.moe is not None:
+                mc = cfg.moe
+                n += d * mc.n_experts
+                n += mc.n_experts * (3 * d * mc.d_ff_expert)
+                if mc.n_shared:
+                    sf = mc.d_ff_shared or mc.n_shared * mc.d_ff_expert
+                    n += 3 * d * sf
+            else:
+                gated = cfg.mlp_act in ("swiglu", "geglu")
+                n += (3 if gated else 2) * d * cfg.d_ff
+        elif bt == "rwkv":
+            n += 5 * d * d + d * 2 * 32 * 5 + 2 * d * 32
+            n += 2 * d * cfg.d_ff
+        else:
+            dr = cfg.rglru_d or d
+            n += 2 * d * dr + dr * d + 2 * dr * (dr // 16) + 4 * dr
+            gated = cfg.mlp_act in ("swiglu", "geglu")
+            n += (3 if gated else 2) * d * cfg.d_ff
+        n += 2 * d                                   # norms
+    if cfg.family == "encdec":
+        enc = cfg.enc_layers * (
+            d * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd + cfg.n_heads * hd * d
+            + 2 * d * cfg.d_ff + 2 * d)
+        xattn = cfg.n_layers * (
+            d * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+            + cfg.n_heads * hd * d + d)
+        n += enc + xattn
+    return float(n)
+
+
+def active_param_count(cfg: ModelConfig) -> float:
+    """Activated params per token (MoE: top-k + shared only)."""
+    if cfg.moe is None:
+        return param_count(cfg)
+    mc = cfg.moe
+    routed_all = cfg.n_layers * mc.n_experts * 3 * cfg.d_model * mc.d_ff_expert
+    routed_act = cfg.n_layers * mc.top_k * 3 * cfg.d_model * mc.d_ff_expert
+    return param_count(cfg) - routed_all + routed_act
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """The classic 6·N·D (train) / 2·N·D (inference) useful-FLOPs yardstick
+    with N = active params, D = tokens processed."""
+    n_act = active_param_count(cfg)
+    if shape.kind == "decode":
+        tokens = shape.global_batch
+        return 2.0 * n_act * tokens
+    tokens = shape.global_batch * shape.seq_len
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_act * tokens

@@ -1,0 +1,141 @@
+"""Roofline analysis: three terms per (arch × shape) on the single-pod mesh.
+
+  compute    = FLOPs / (chips × 197e12 bf16 FLOP/s)
+  memory     = HBM bytes / (chips × 819e9 B/s)
+  collective = collective bytes / (chips × 50e9 B/s link)
+
+Sources (methodology in EXPERIMENTS.md):
+  * FLOPs / HBM bytes: analytic op-by-op model (flops_model.py) — XLA's
+    cost analysis counts while(scan) bodies once, verified by probe;
+  * collective bytes: parsed from the partitioned HLO (dryrun JSON),
+    weighted by scan trip counts per while-nesting depth;
+  * MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (inference).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES, get_config
+from repro.models.transformer import seg_structure
+
+from .flops_model import count_step
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link
+CHIPS = 256                  # single-pod roofline
+
+DRYRUN_DIR = os.environ.get("DRYRUN_OUT", "results/dryrun")
+
+
+def trip_weights(arch: str, shape_name: str) -> Dict[str, float]:
+    """while-nesting-depth -> trip-count multiplier.
+
+    depth 0: outside loops; depth 1: layer scan (units); depth 2: the inner
+    scan — attention KV chunks over the *actual context* (window-bounded for
+    SWA/local-attn archs; the decode cache length for decode) or recurrent
+    time steps.  Mixed-inner archs take the max (upper bound, noted)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    units = sum(count for _, count in seg_structure(cfg))
+    if cfg.family == "encdec":
+        units += cfg.enc_layers            # encoder scan too (same depth)
+
+    # actual attended context for the chunked attention scan
+    if len(cfg.block_pattern) > 1:
+        attn_ctx = min(cfg.local_window, shape.seq_len)
+    elif cfg.window:
+        attn_ctx = min(cfg.window, shape.seq_len)
+    else:
+        attn_ctx = shape.seq_len
+    if shape.kind == "decode":
+        # cache length = window for SWA/local archs, else seq_len
+        pass                                # attn_ctx already the cache span
+    has_attn = any(cfg.block_type(i) == "attn" for i in range(cfg.n_layers))
+    inner = -(-attn_ctx // cfg.attn_chunk) if has_attn else 1
+    # recurrent time scans run per token in seq modes, once in decode
+    t_steps = 1 if shape.kind == "decode" else shape.seq_len
+    has_rec = any(b in ("rwkv", "rglru") for b in cfg.block_pattern)
+    inner_mixed = max(inner, t_steps) if has_rec else inner
+    return {"0": 1.0, "1": float(units),
+            "2": float(units * inner_mixed),          # untagged upper bound
+            "2a": float(units * inner),               # attention chunks
+            "2t": float(units * t_steps),             # recurrent time steps
+            "1a": float(inner), "1t": float(t_steps),
+            "3": float(units * inner_mixed)}
+
+
+def weighted_collective_bytes(rec: dict, arch: str, shape_name: str) -> float:
+    w = trip_weights(arch, shape_name)
+    per_dev = 0.0
+    for depth_s, b in rec["collectives"]["by_depth"].items():
+        per_dev += b * w.get(depth_s, w["2"])
+    return per_dev * rec["n_devices"]       # global bytes
+
+
+def load_cell(arch: str, shape: str, mesh: str = "pod1",
+              abft: str = "fused") -> Optional[dict]:
+    path = os.path.join(DRYRUN_DIR, f"{arch}__{shape}__{mesh}__{abft}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def roofline_row(arch: str, shape_name: str, abft: str = "fused"
+                 ) -> Optional[Dict]:
+    rec = load_cell(arch, shape_name, "pod1", abft)
+    if rec is None or rec.get("status") != "ok":
+        return None
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    an = count_step(cfg, shape, abft)
+    coll_bytes = weighted_collective_bytes(rec, arch, shape_name)
+    t_c = an["flops"] / (CHIPS * PEAK_FLOPS)
+    t_m = an["bytes"] / (CHIPS * HBM_BW)
+    t_x = coll_bytes / (CHIPS * LINK_BW)
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])
+    bound = max(t_c, t_m, t_x)
+    return {
+        "arch": arch, "shape": shape_name,
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom[0],
+        "roofline_frac": t_c / bound if bound else 0.0,
+        "model_flops": an["model_flops"],
+        "hlo_flops": an["flops"],
+        "useful_ratio": an["model_flops"] / an["flops"],
+        "peak_gib": rec["memory"]["peak_bytes"] / 2**30,
+        "collective_gib": coll_bytes / 2**30,
+    }
+
+
+def run(csv: List[str]) -> None:
+    print("\n=== Roofline (single-pod 256 × v5e; seconds per step) ===")
+    print(f"{'arch':22s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
+          f"{'collect':>9s} {'bound':>10s} {'C/roof':>6s} {'useful':>6s} "
+          f"{'peak GiB':>8s}")
+    t0 = time.perf_counter()
+    from repro.configs import list_archs
+    for arch in list_archs():
+        for shape in SHAPES:
+            row = roofline_row(arch, shape)
+            if row is None:
+                continue
+            print(f"{arch:22s} {shape:12s} {row['compute_s']:9.4f} "
+                  f"{row['memory_s']:9.4f} {row['collective_s']:9.4f} "
+                  f"{row['dominant']:>10s} {row['roofline_frac']:6.2f} "
+                  f"{row['useful_ratio']:6.2f} {row['peak_gib']:8.2f}")
+            csv.append(
+                f"roofline_{arch}_{shape}_frac,"
+                f"{(time.perf_counter()-t0)*1e6:.0f},"
+                f"{row['roofline_frac']:.4f}")
+
+
+if __name__ == "__main__":
+    out: List[str] = []
+    run(out)

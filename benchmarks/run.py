@@ -1,0 +1,47 @@
+"""Benchmark driver — one module per paper table/figure + beyond-paper.
+
+Prints ``name,us_per_call,derived`` CSV at the end.  Individual benches:
+  python -m benchmarks.table2_op_counts        (paper Table II)
+  python -m benchmarks.table1_fault_detection  (paper Table I)
+  python -m benchmarks.fig3_runtime_split      (paper Fig. 3)
+  python -m benchmarks.abft_overhead           (Table II transposed to LMs)
+  python -m benchmarks.roofline                (reads results/dryrun JSONs)
+"""
+from __future__ import annotations
+
+import argparse
+from typing import List
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all",
+                    help="comma list: table2,table1,fig3,abft,roofline")
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only != "all" else {
+        "table2", "table1", "fig3", "abft", "roofline"}
+
+    csv: List[str] = []
+    if "table2" in want:
+        from benchmarks import table2_op_counts
+        table2_op_counts.run(csv)
+    if "fig3" in want:
+        from benchmarks import fig3_runtime_split
+        fig3_runtime_split.run(csv)
+    if "abft" in want:
+        from benchmarks import abft_overhead
+        abft_overhead.run(csv)
+    if "table1" in want:
+        from benchmarks import table1_fault_detection
+        table1_fault_detection.run(csv)
+    if "roofline" in want:
+        from benchmarks import roofline
+        roofline.run(csv)
+
+    print("\nname,us_per_call,derived")
+    for line in csv:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

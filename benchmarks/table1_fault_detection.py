@@ -1,0 +1,104 @@
+"""Paper Table I: fault-detection accuracy under single bit flips.
+
+Campaigns per (dataset × ABFT mode): site chosen ∝ op counts (mm_bias
+configurable — the paper's wide-MAC-array accelerator implies a larger
+matmul share; we report mm_bias=5 as primary and mm_bias=1 in the CSV),
+uniform bit, thresholds 1e-4..1e-7.  Trained weights (teacher-labelled
+synthetic graphs, cached) set realistic activation magnitudes.
+
+CPU budget knobs (documented deviations): campaign counts default to
+1000/dataset·mode (paper: 5000 — the paper notes more campaigns do not
+change behaviour; our ±1σ ≈ 0.7 % at n=1000); Nell uses 400.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import time
+from typing import List
+
+import numpy as np
+
+CACHE = "results/cache"
+N_CAMPAIGNS = {"cora": 1000, "citeseer": 1000, "pubmed": 800, "nell": 400}
+EPOCHS = {"cora": 150, "citeseer": 150, "pubmed": 80, "nell": 40}
+LR = {"cora": 0.5, "citeseer": 0.5, "pubmed": 0.3, "nell": 0.1}
+THRESH = (1e-4, 1e-5, 1e-6, 1e-7)
+MM_BIAS = 5.0
+
+PAPER_1E7 = {  # (split det, split fp, fused det, fused fp) at tau=1e-7
+    "cora": (95.80, 4.20, 96.66, 3.34),
+    "citeseer": (95.44, 4.56, 97.06, 2.94),
+    "pubmed": (96.38, 3.62, 97.42, 2.58),
+    "nell": (96.90, 3.10, 97.82, 2.18),
+}
+
+
+def _trained_model(name: str):
+    from repro.core.datasets import make_dataset
+    from repro.core.fault import NumpyGCN, train_weights_numpy
+
+    os.makedirs(CACHE, exist_ok=True)
+    path = os.path.join(CACHE, f"{name}_weights.pkl")
+    ds = make_dataset(name, seed=0, normalize=False)
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            ws = pickle.load(f)
+    else:
+        ws = train_weights_numpy(ds, epochs=EPOCHS[name], lr=LR[name], seed=0)
+        with open(path, "wb") as f:
+            pickle.dump(ws, f)
+    return ds, NumpyGCN(ds, weights=ws)
+
+
+def run(csv: List[str]) -> None:
+    from repro.core.fault import run_campaigns
+
+    print("\n=== Table I: fault-detection accuracy (single bit flip) ===")
+    print(f"(synthetic stand-in graphs; n per cell as configured; "
+          f"mm_bias={MM_BIAS} primary)")
+    for name in ("cora", "citeseer", "pubmed", "nell"):
+        t0 = time.perf_counter()
+        ds, model = _trained_model(name)
+        acc = float((model.pred_cls == ds.labels).mean())
+        n = N_CAMPAIGNS[name]
+        line = {"split": None, "fused": None}
+        for mode in ("split", "fused"):
+            s = run_campaigns(model, mode, n=n, seed=7, thresholds=THRESH,
+                              mm_bias=MM_BIAS)
+            line[mode] = s
+            # secondary: op-proportional site weighting
+            s1 = run_campaigns(model, mode, n=n // 2, seed=8,
+                               thresholds=THRESH, mm_bias=1.0)
+            dt = (time.perf_counter() - t0) * 1e6 / n
+            for tau in THRESH:
+                csv.append(
+                    f"table1_{name}_{mode}_tau{tau:.0e}_detected,{dt:.1f},"
+                    f"{s.detected[tau]:.2f}")
+            csv.append(f"table1_{name}_{mode}_bias1_det_1e-7,{dt:.1f},"
+                       f"{s1.detected[1e-7]:.2f}")
+        p = PAPER_1E7[name]
+        sp, fu = line["split"], line["fused"]
+        print(f"\n{name} (train acc {acc:.2f}, n={n}, campaigns "
+              f"{(time.perf_counter()-t0):.1f}s)")
+        print(f"  {'tau':>6s} | split: det    fp  silent | "
+              f"fused: det    fp  silent")
+        for tau in THRESH:
+            print(f"  {tau:6.0e} | {sp.detected[tau]:6.2f} "
+                  f"{sp.false_pos[tau]:5.2f} {sp.silent[tau]:6.2f} | "
+                  f"     {fu.detected[tau]:6.2f} {fu.false_pos[tau]:5.2f} "
+                  f"{fu.silent[tau]:6.2f}")
+        print(f"  paper @1e-7: split {p[0]:.2f}/{p[1]:.2f}, "
+              f"fused {p[2]:.2f}/{p[3]:.2f} (det/fp)")
+        print(f"  criticality: {sp.critical_rate:.1f}% of output-corrupting "
+              f"faults flip ≥1 node; avg {sp.avg_nodes_affected:.2f}% nodes")
+        # the paper's key orderings:
+        ok1 = fu.false_pos[1e-7] <= sp.false_pos[1e-7] + 0.5
+        ok2 = fu.silent[1e-7] < 0.5 and sp.silent[1e-7] < 0.5
+        print(f"  [claims] fused FP <= split FP: {ok1}; "
+              f"zero-silent @1e-7: {ok2}")
+
+
+if __name__ == "__main__":
+    out: List[str] = []
+    run(out)

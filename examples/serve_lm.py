@@ -1,0 +1,71 @@
+"""End-to-end driver 3: batched serving with KV cache + fused ABFT checks
+on every decode step (the paper's error detection running live in an
+inference server loop).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma-2b --new 32
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.core.abft import ABFTConfig
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.models.transformer import init_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt", type=int, default=32)
+    ap.add_argument("--new", type=int, default=32)
+    ap.add_argument("--mode", default="fused",
+                    choices=["none", "split", "fused"])
+    args = ap.parse_args()
+
+    cfg = smoke_config(get_config(args.arch))
+    abft = ABFTConfig(mode=args.mode, threshold=5e-2, relative=True)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    cache_len = args.prompt + args.new
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(args.batch, args.prompt)),
+        jnp.int32)}
+    if cfg.family == "encdec":
+        batch["src_embeds"] = jnp.asarray(
+            rng.normal(size=(args.batch, args.prompt, cfg.d_model)),
+            jnp.float32)
+
+    prefill = jax.jit(make_prefill_step(cfg, abft, cache_len))
+    decode = jax.jit(make_decode_step(cfg, abft))
+
+    t0 = time.time()
+    logits, states, m = prefill(params, batch)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    t_prefill = time.time() - t0
+    print(f"prefill {args.batch}×{args.prompt}: {t_prefill*1e3:.0f} ms  "
+          f"abft_flag={bool(m['abft_flag'])}")
+
+    out_tokens = [tok]
+    flags = 0
+    t0 = time.time()
+    for i in range(args.new - 1):
+        pos = jnp.asarray(args.prompt + i, jnp.int32)
+        logits, states, m = decode(params, states, tok, pos)
+        flags += int(bool(m["abft_flag"]))
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        out_tokens.append(tok)
+    dt = time.time() - t0
+    toks = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
+    print(f"decoded {args.new} tokens × {args.batch} seqs in {dt:.2f}s "
+          f"({dt/max(args.new-1,1)*1e3:.1f} ms/step), ABFT flags: {flags}")
+    print(f"sample continuation (seq 0): {toks[0][:16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

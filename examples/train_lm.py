@@ -1,0 +1,99 @@
+"""End-to-end driver 2: train an LM (reduced config of any assigned arch)
+on the synthetic token stream, ABFT-checked, with checkpoint/restore.
+
+    PYTHONPATH=src python examples/train_lm.py --arch gemma-2b --steps 200
+    PYTHONPATH=src python examples/train_lm.py --arch deepseek-moe-16b \
+        --steps 50 --width 128   # MoE routing exercised end to end
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, smoke_config
+from repro.core.abft import ABFTConfig
+from repro.data.synthetic import SyntheticLM
+from repro.launch.steps import init_train_state, make_train_step
+from repro.optim import AdamWConfig
+from repro.runtime import ABFTGuard, StragglerWatchdog
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--width", type=int, default=0,
+                    help="override d_model for a bigger run")
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--mode", default="fused",
+                    choices=["none", "split", "fused"])
+    ap.add_argument("--ckpt", default="results/ckpt_lm")
+    args = ap.parse_args()
+
+    cfg = smoke_config(get_config(args.arch))
+    over = {}
+    if args.width:
+        over["d_model"] = args.width
+        over["head_dim"] = max(16, args.width // cfg.n_heads)
+    if args.layers:
+        over["n_layers"] = args.layers
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+    abft = ABFTConfig(mode=args.mode, threshold=5e-2, relative=True)
+
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                       batch_size=args.batch, seed=0)
+    it = data.batches()
+
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
+    print(f"arch={cfg.name} params={n_params/1e6:.2f}M abft={args.mode}")
+
+    step_fn = jax.jit(make_train_step(cfg, abft, AdamWConfig(lr=1e-3),
+                                      total_steps=args.steps, warmup=20))
+    ckpt = CheckpointManager(args.ckpt, keep=2)
+    restored, at = ckpt.restore(state)
+    if restored is not None:
+        state = restored
+        print(f"restored from step {at}")
+
+    guard = ABFTGuard()
+    wd = StragglerWatchdog()
+    losses = []
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = {k: jax.numpy.asarray(v) for k, v in next(it).items()}
+        if cfg.family == "encdec":
+            batch["src_embeds"] = jax.numpy.asarray(
+                np.random.default_rng(i).normal(
+                    size=(args.batch, args.seq, cfg.d_model)), jax.numpy.float32)
+        elif cfg.frontend:
+            batch["prefix_embeds"] = jax.numpy.zeros(
+                (args.batch, 4, cfg.d_model), jax.numpy.float32)
+        wd.start()
+        state, m = guard.run_step(lambda s, b=batch: step_fn(s, b), state)
+        slow = wd.stop()
+        losses.append(float(m["loss"]))
+        if i % 25 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss={losses[-1]:.4f} "
+                  f"gnorm={float(m['grad_norm']):.2f} "
+                  f"abft_rel={float(m['abft_max_rel']):.1e} "
+                  f"{'SLOW' if slow else ''}")
+        if i and i % 100 == 0:
+            ckpt.save(i, state)
+    ckpt.save(args.steps, state)
+    ckpt.wait()
+    dt = time.time() - t0
+    improved = losses[-1] < losses[0] - 0.1
+    print(f"\n{args.steps} steps in {dt:.1f}s ({dt/args.steps*1e3:.0f} "
+          f"ms/step); loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(improved: {improved}); ABFT flags: {guard.flags}")
+
+
+if __name__ == "__main__":
+    main()

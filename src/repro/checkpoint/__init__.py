@@ -1,0 +1,6 @@
+from .ckpt import (  # noqa: F401
+    CheckpointManager,
+    load_checkpoint,
+    save_checkpoint,
+)
+from .elastic import reshard_restore  # noqa: F401

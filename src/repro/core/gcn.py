@@ -1,0 +1,79 @@
+"""The paper's target model: a Kipf & Welling GCN with ABFT checking.
+
+JAX path (this file): dense normalized adjacency — used by tests, examples
+and the pjit'd distributed demo on synthetic graphs.  The large-scale sparse
+realism (CSR, per-MAC fault injection) lives in the numpy engine
+(``core/fault.py``), matching the paper's accelerator-level evaluation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .abft import ABFTConfig, ABFTReport, Check, gcn_layer, summarize
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def init_gcn(rng: jax.Array, dims: Sequence[int]) -> Params:
+    """Glorot-initialized weights for a len(dims)-1 layer GCN."""
+    keys = jax.random.split(rng, len(dims) - 1)
+    layers = []
+    for k, (fin, fout) in zip(keys, zip(dims[:-1], dims[1:])):
+        scale = jnp.sqrt(6.0 / (fin + fout))
+        layers.append({"w": jax.random.uniform(k, (fin, fout), jnp.float32,
+                                               -scale, scale)})
+    return {"layers": layers}
+
+
+def gcn_forward(params: Params, s: Array, h0: Array, cfg: ABFTConfig
+                ) -> Tuple[Array, List[Check]]:
+    """Forward pass; checks are taken pre-activation (as in the paper)."""
+    h = h0
+    checks: List[Check] = []
+    n_layers = len(params["layers"])
+    for i, layer in enumerate(params["layers"]):
+        h_out, cs = gcn_layer(s, h, layer["w"], cfg)
+        checks.extend(cs)
+        h = jax.nn.relu(h_out) if i < n_layers - 1 else h_out
+    return h, checks
+
+
+def gcn_apply(params: Params, s: Array, h0: Array, cfg: ABFTConfig
+              ) -> Tuple[Array, ABFTReport]:
+    logits, checks = gcn_forward(params, s, h0, cfg)
+    return logits, summarize(checks, cfg)
+
+
+def gcn_loss(params: Params, s: Array, h0: Array, labels: Array,
+             mask: Optional[Array], cfg: ABFTConfig
+             ) -> Tuple[Array, ABFTReport]:
+    logits, report = gcn_apply(params, s, h0, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    if mask is not None:
+        nll = jnp.where(mask, nll, 0.0)
+        loss = nll.sum() / jnp.maximum(mask.sum(), 1)
+    else:
+        loss = nll.mean()
+    return loss, report
+
+
+def normalized_adjacency_dense(edges: np.ndarray, n: int) -> np.ndarray:
+    """D^-1/2 (A + I) D^-1/2 as a dense float32 matrix (small graphs)."""
+    a = np.zeros((n, n), np.float32)
+    a[edges[:, 0], edges[:, 1]] = 1.0
+    a[edges[:, 1], edges[:, 0]] = 1.0
+    np.fill_diagonal(a, 1.0)
+    d = a.sum(1)
+    dinv = 1.0 / np.sqrt(np.maximum(d, 1.0))
+    return (a * dinv[None, :]) * dinv[:, None]
+
+
+def dataset_to_dense(ds) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(S, H0, labels) dense views of a core.datasets.GraphDataset."""
+    return ds.s.todense(), ds.features.todense(), ds.labels

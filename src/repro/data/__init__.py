@@ -1,0 +1,2 @@
+from .synthetic import SyntheticLM, make_batch_specs  # noqa: F401
+from .loader import ShardedLoader, Prefetcher  # noqa: F401

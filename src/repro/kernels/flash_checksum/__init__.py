@@ -1,0 +1,1 @@
+from .ops import flash_attention_checksum  # noqa: F401

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: flash attention emitting the fused ABFT chain checksum.
+
+Streaming (online-softmax) attention never materializes A = softmax(QKᵀ), so
+the paper's `s_c = eᵀA` is unavailable — but the chain checksum of
+O = A·V·W_o only needs  Σ_q A[q,:]·(V·w_or)  with w_or = W_o·e offline
+(DESIGN.md §5).  The kernel therefore carries ONE extra accumulator column
+(`ex`) updated with the same probability block as the output accumulator:
+
+    acc += P_blk @ V_blk          (the flash update)
+    ex  += P_blk @ vr_blk         (the ABFT column — T×block_k extra MACs)
+
+Grid (BH, T/bq, S/bk), K innermost; scratch m/l/acc/ex in VMEM, f32.
+Inputs are per-(batch·head) slices: q [BH,T,dh], k/v [BH,S,dh], vr [BH,S,1].
+Outputs: o [BH,T,dh], o_extra [BH,T,1] with Σ o_extra = eᵀ(A V W_o)e.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(causal: bool, scale: float,
+            q_ref, k_ref, v_ref, vr_ref,
+            o_ref, ex_ref,
+            m_sc, l_sc, acc_sc, exacc_sc):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    bq = q_ref.shape[1]
+    bk = k_ref.shape[1]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+        exacc_sc[...] = jnp.zeros_like(exacc_sc)
+
+    def compute():
+        q = q_ref[0]                                   # [bq, dh]
+        k = k_ref[0]                                   # [bk, dh]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [bq, bk]
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            valid = kpos <= qpos
+            s = jnp.where(valid, s, NEG)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        if causal:
+            p = jnp.where(valid, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * corr + p.sum(axis=1, keepdims=True)
+        m_sc[...] = m_new
+        acc_sc[...] = acc_sc[...] * corr + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        exacc_sc[...] = exacc_sc[...] * corr + jax.lax.dot_general(
+            p.astype(vr_ref.dtype), vr_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    if causal:
+        # skip key blocks strictly above the diagonal
+        @pl.when(ki * bk <= qi * bq + bq - 1)
+        def _():
+            compute()
+    else:
+        compute()
+
+    @pl.when(ki == nk - 1)
+    def _epilogue():
+        l = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0] = (acc_sc[...] / l).astype(o_ref.dtype)
+        ex_ref[0] = (exacc_sc[...] / l).astype(ex_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_checksum_kernel(q, k, v, vr, *, causal: bool = True,
+                          block_q: int = 128, block_k: int = 128,
+                          interpret: bool = False):
+    bh, t, dh = q.shape
+    s = k.shape[1]
+    assert t % block_q == 0 and s % block_k == 0
+    scale = dh ** -0.5
+    grid = (bh, t // block_q, s // block_k)
+    kern = functools.partial(_kernel, causal, scale)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, 1), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_q, 1), lambda b, qi, ki: (b, qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, dh), q.dtype),
+            jax.ShapeDtypeStruct((bh, t, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, vr)

@@ -1,0 +1,64 @@
+"""jit'd wrapper: head grouping, W_o folding, padding, Check construction."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.abft import Check
+
+from .kernel import flash_checksum_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention_checksum(q, k, v, w_or, *, causal: bool = True,
+                             block_q: int = 128, block_k: int = 128,
+                             interpret: bool = False
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """q: [B,T,H,dh]; k,v: [B,S,Kh,dh]; w_or: [H,dh] = per-head W_o·e.
+
+    Returns (o [B,T,H,dh], o_extra [B,T,H]): Σ o_extra equals the fused
+    chain checksum eᵀ(A·V·W_o)e — compare against Σ(attn_out·W_o) with
+    `Check(predicted=o_extra.sum(), actual=out.sum())`.
+    """
+    b, t, h, dh = q.shape
+    s = k.shape[1]
+    kh = k.shape[2]
+    g = h // kh
+    # expand KV to query heads ([B,S,Kh,dh] -> [B,S,H,dh]) and fold w_or
+    k_e = jnp.repeat(k, g, axis=2)
+    v_e = jnp.repeat(v, g, axis=2)
+    vr = jnp.einsum("bskd,kd->bsk", v_e.astype(jnp.float32),
+                    w_or.astype(jnp.float32))[..., None]      # [B,S,H,1]
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, t, dh)
+    kf = k_e.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    vf = v_e.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    vrf = vr.transpose(0, 2, 1, 3).reshape(b * h, s, 1).astype(q.dtype)
+
+    pad_q = (-t) % block_q
+    pad_k = (-s) % block_k
+    if pad_q:
+        qf = jnp.pad(qf, [(0, 0), (0, pad_q), (0, 0)])
+    if pad_k:
+        kf = jnp.pad(kf, [(0, 0), (0, pad_k), (0, 0)])
+        vf = jnp.pad(vf, [(0, 0), (0, pad_k), (0, 0)])
+        vrf = jnp.pad(vrf, [(0, 0), (0, pad_k), (0, 0)])
+        # padded keys must never win the softmax: rely on causal mask for
+        # causal=True; for bidirectional, bias keys via -inf in kernel is
+        # avoided by requiring S % block_k == 0 (caller contract).
+        assert causal, "non-causal inputs must be pre-padded to block_k"
+
+    o, ex = flash_checksum_kernel(qf, kf, vf, vrf, causal=causal,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=interpret)
+    o = o[:, :t].reshape(b, h, t, dh).transpose(0, 2, 1, 3)
+    ex = ex[:, :t, 0].reshape(b, h, t).transpose(0, 2, 1)
+    return o, ex
+
+
+def chain_check(o_extra: jax.Array, out_after_wo: jax.Array) -> Check:
+    return Check(predicted=o_extra.astype(jnp.float32).sum(),
+                 actual=out_after_wo.astype(jnp.float32).sum())

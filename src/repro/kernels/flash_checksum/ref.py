@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the flash_checksum kernel: materialized-A attention
+plus the exact fused chain checksum quantities."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_checksum_ref(q, k, v, vr, *, causal: bool = True):
+    """q: [BH,T,dh]; k,v: [BH,S,dh]; vr: [BH,S,1].
+    Returns (o [BH,T,dh], o_extra [BH,T,1])."""
+    bh, t, dh = q.shape
+    s = k.shape[1]
+    scale = dh ** -0.5
+    logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = jnp.arange(t)[:, None]
+        kpos = jnp.arange(s)[None, :]
+        logits = jnp.where(kpos <= qpos, logits, -1e30)
+    a = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bqk,bkd->bqd", a, v.astype(jnp.float32))
+    o_extra = jnp.einsum("bqk,bkd->bqd", a, vr.astype(jnp.float32))
+    return o.astype(q.dtype), o_extra.astype(jnp.float32)

@@ -1,0 +1,1 @@
+from .ops import matmul_abft  # noqa: F401

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: blocked matmul with FUSED ABFT checksum epilogue.
+
+TPU-native adaptation of the paper's systolic augmented-matrix trick
+(DESIGN.md §5): instead of physically appending checksum rows/columns to the
+operands (which breaks 128-lane/MXU tiling — a 2048+1-column matrix pads to
+2176 and wastes MXU cycles), the operands stay pristine and the checksum
+quantities accumulate in VMEM scratch during the SAME HBM pass:
+
+  outputs:  C = A @ B                      [M, N]
+            block_sums[mi, ni] = Σ C_blk   (actual checksum, per block —
+                                            final reduce is O(M/bm · N/bn))
+            extra = A @ b_r                [M]  (the paper's eq. (5) column;
+                                            b_r = B·e computed offline)
+
+Grid: (M/bm, N/bn, K/bk), K innermost ("arbitrary"), f32 accumulation in
+VMEM scratch; the extra column accumulates only on the n==0 sweep so it
+costs one extra MXU column, exactly like the paper's augmented operand.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, br_ref, c_ref, sums_ref, extra_ref,
+            acc_ref, ex_ref):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    ni = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when((ki == 0) & (ni == 0))
+    def _init_ex():
+        ex_ref[...] = jnp.zeros_like(ex_ref)
+
+    a = a_ref[...]
+    acc_ref[...] += jnp.dot(a, b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(ni == 0)
+    def _extra():
+        ex_ref[...] += jnp.dot(a, br_ref[...],
+                               preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        c_ref[...] = acc.astype(c_ref.dtype)
+        sums_ref[0, 0] = jnp.sum(acc)
+
+        @pl.when(ni == 0)
+        def _write_extra():
+            extra_ref[...] = ex_ref[...].astype(extra_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def matmul_abft_kernel(a: jax.Array, b: jax.Array, br: jax.Array, *,
+                       block_m: int = 128, block_n: int = 128,
+                       block_k: int = 128, interpret: bool = False):
+    """a: [M, K]; b: [K, N]; br: [K, 1] (= B·e, offline).
+    Returns (c [M,N], block_sums [M/bm, N/bn], extra [M, 1])."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and br.shape == (k, 1)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        "caller (ops.py) pads to block multiples")
+    grid = (m // block_m, n // block_n, k // block_k)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((block_k, block_n), lambda mi, ni, ki: (ki, ni)),
+            pl.BlockSpec((block_k, 1), lambda mi, ni, ki: (ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, block_n), lambda mi, ni, ki: (mi, ni)),
+            pl.BlockSpec((1, 1), lambda mi, ni, ki: (mi, ni)),
+            pl.BlockSpec((block_m, 1), lambda mi, ni, ki: (mi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), a.dtype),
+            jax.ShapeDtypeStruct(grid[:2], jnp.float32),
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_m, block_n), jnp.float32),
+            pltpu.VMEM((block_m, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, b, br)

@@ -1,0 +1,51 @@
+"""jit'd public wrapper for the matmul_abft Pallas kernel: padding to block
+multiples, final block-sum reduction, Check construction."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.abft import ABFTConfig, Check
+from repro.core.checksum import col_checksum
+
+from .kernel import matmul_abft_kernel
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    r = x.shape[axis] % mult
+    if r == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, mult - r)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def matmul_abft(a: jax.Array, b: jax.Array, br: Optional[jax.Array] = None, *,
+                block_m: int = 128, block_n: int = 128, block_k: int = 128,
+                interpret: bool = False) -> Tuple[jax.Array, Check]:
+    """C = A @ B with the fused ABFT check computed in the same pass.
+
+    ``br`` is the offline right-checksum column B·e; recomputed here when not
+    supplied (weights: fold it at load time).  Returns (C, Check) where
+    Check.predicted = (eᵀA)·(B e) and Check.actual = Σ C — both produced by
+    the kernel epilogue, not a second HBM pass.
+    """
+    m, k = a.shape
+    _, n = b.shape
+    if br is None:
+        br = b.astype(jnp.float32).sum(axis=1, keepdims=True)
+    ap = _pad_to(_pad_to(a, block_m, 0), block_k, 1)
+    bp = _pad_to(_pad_to(b, block_k, 0), block_n, 1)
+    brp = _pad_to(br, block_k, 0)
+    c, block_sums, extra = matmul_abft_kernel(
+        ap, bp, brp, block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=interpret)
+    c = c[:m, :n]
+    actual = block_sums.sum()                       # O(#blocks) reduce
+    predicted = extra[:m, 0].sum()                  # Σ (A b_r) = eᵀA B e
+    return c, Check(predicted=predicted, actual=actual)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the matmul_abft kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_abft_ref(a: jax.Array, b: jax.Array, br: jax.Array):
+    """Returns (c, actual_checksum_scalar, extra[M,1]) in f32 accumulation."""
+    c = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    actual = c.sum()
+    extra = jnp.dot(a, br, preferred_element_type=jnp.float32)
+    return c.astype(a.dtype), actual, extra.astype(jnp.float32)

@@ -1,0 +1,272 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be the very first two lines — jax locks the device count on first init:
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax               # noqa: E402
+import numpy as np       # noqa: E402
+
+from repro.configs import SHAPES, get_config, list_archs  # noqa: E402
+from repro.configs.base import ModelConfig, ShapeConfig  # noqa: E402
+from repro.core.abft import ABFTConfig  # noqa: E402
+from repro.data.synthetic import make_batch_specs  # noqa: E402
+from repro.launch.mesh import ShardingRules, make_production_mesh  # noqa: E402
+from repro.launch.steps import (  # noqa: E402
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+from repro.models.transformer import init_decode_state, init_model  # noqa: E402
+from repro.optim import AdamWConfig  # noqa: E402
+
+RESULTS = os.environ.get("DRYRUN_OUT", "results/dryrun")
+
+# long_500k needs sub-quadratic attention — skips recorded per DESIGN.md.
+def cell_supported(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return "full-attention arch: 500k decode is quadratic (DESIGN.md)"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# collective-byte extraction from the partitioned HLO
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "s8": 1, "u8": 1, "pred": 1, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s*(.*?)\s(all-reduce|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute)(-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Per-device bytes moved by collectives, by op kind and loop depth.
+
+    Conventions (EXPERIMENTS.md §Roofline methodology):
+      * result-shape bytes per op; all-reduce counted 2× (ring = reduce-
+        scatter + all-gather phases);
+      * the partitioned module is per-device, so these are per-device bytes;
+      * XLA prints while(scan) bodies once — each op records its `while/body`
+        nesting depth from its op_name metadata so the roofline tool can
+        weight by the known trip counts (layer-scan units, KV chunks, ...).
+    """
+    by_kind: Dict[str, float] = {}
+    by_depth: Dict[str, float] = {}
+    count = 0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if m.group(3) == "-done":
+            continue          # async pairs: count the -start only
+        kind = m.group(2)
+        b = _shape_bytes(m.group(1))
+        factor = 2.0 if kind == "all-reduce" else 1.0
+        depth = line.count("while/body")
+        # scope-tagged depth key: 'time_scan' vs 'attn_chunk_scan' inner
+        # loops have very different trip counts (T vs n_chunks)
+        tag = str(depth)
+        if depth >= 2 or (depth == 1 and ("time_scan" in line or
+                                          "attn_chunk_scan" in line)):
+            if "time_scan" in line:
+                tag = f"{depth}t"
+            elif "attn_chunk_scan" in line:
+                tag = f"{depth}a"
+        by_kind[kind] = by_kind.get(kind, 0.0) + b * factor
+        by_depth[tag] = by_depth.get(tag, 0.0) + b * factor
+        count += 1
+    return {"per_device_bytes_unweighted": sum(by_kind.values()),
+            "by_kind": by_kind, "by_depth": by_depth, "n_ops": count}
+
+
+# ---------------------------------------------------------------------------
+# cell construction
+# ---------------------------------------------------------------------------
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, abft: ABFTConfig):
+    """Returns (jitted_fn, arg_specs) ready for .lower(*arg_specs)."""
+    rules = ShardingRules(mesh)
+    param_shapes = jax.eval_shape(
+        lambda: init_model(cfg, jax.random.PRNGKey(0)))
+    pshard = rules.params_shardings(param_shapes)
+    batch_specs = make_batch_specs(cfg, shape)
+    bshard = rules.batch_shardings(batch_specs)
+    rep = rules.replicated()
+
+    if shape.kind == "train":
+        opt_shapes = {
+            "m": param_shapes, "v": param_shapes,
+            "step": jax.ShapeDtypeStruct((), jax.numpy.int32)}
+        oshard = {"m": pshard, "v": pshard, "step": rep}
+        state_specs = {"params": param_shapes, "opt": opt_shapes}
+        sshard = {"params": pshard, "opt": oshard}
+        step = make_train_step(cfg, abft, AdamWConfig())
+        fn = jax.jit(step, in_shardings=(sshard, bshard),
+                     out_shardings=(sshard, rep))
+        return fn, (state_specs, batch_specs)
+
+    if shape.kind == "prefill":
+        # VLM/audio stubs prepend 64 frame/patch embeddings to the stream
+        prefix = 64 if (cfg.frontend and cfg.family != "encdec") else 0
+        cache_len = shape.seq_len + prefix
+        step = make_prefill_step(cfg, abft, cache_len=cache_len)
+        state_shapes = jax.eval_shape(
+            lambda: init_decode_state(cfg, shape.global_batch, cache_len))
+        st_shard = rules.state_shardings(state_shapes, shape.global_batch,
+                                         cfg.n_kv_heads)
+        logits_shard = jax.sharding.NamedSharding(
+            mesh, rules.batch_spec((shape.global_batch, 1, cfg.vocab_size),
+                                   shape.global_batch))
+        fn = jax.jit(step, in_shardings=(pshard, bshard),
+                     out_shardings=(logits_shard, st_shard, rep))
+        return fn, (param_shapes, batch_specs)
+
+    # decode
+    cache_len = shape.seq_len
+    state_shapes = jax.eval_shape(
+        lambda: init_decode_state(cfg, shape.global_batch, cache_len))
+    st_shard = rules.state_shardings(state_shapes, shape.global_batch,
+                                     cfg.n_kv_heads)
+    step = make_decode_step(cfg, abft)
+    logits_shard = jax.sharding.NamedSharding(
+        mesh, rules.batch_spec((shape.global_batch, 1, cfg.vocab_size),
+                               shape.global_batch))
+    fn = jax.jit(step, in_shardings=(pshard, st_shard, bshard["tokens"], rep),
+                 out_shardings=(logits_shard, st_shard, rep))
+    pos_spec = jax.ShapeDtypeStruct((), jax.numpy.int32)
+    return fn, (param_shapes, state_shapes, batch_specs["tokens"], pos_spec)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             abft_mode: str = "fused", out_dir: str = RESULTS,
+             force: bool = False) -> Dict[str, Any]:
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(
+        out_dir, f"{arch}__{shape_name}__{mesh_tag}__{abft_mode}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            cached = json.load(f)
+        if cached.get("status") in ("ok", "skipped"):
+            return cached        # errors are always retried
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+        "abft": abft_mode, "status": "?",
+    }
+    skip = cell_supported(cfg, shape)
+    if skip:
+        rec.update(status="skipped", reason=skip)
+        _write(out_path, rec)
+        return rec
+
+    abft = ABFTConfig(mode=abft_mode, threshold=2e-2, relative=True)
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        with mesh:
+            fn, specs = build_cell(cfg, shape, mesh, abft)
+            lowered = fn.lower(*specs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            coll = collective_bytes(compiled.as_text())
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            flops_per_device=cost.get("flops", -1.0),
+            bytes_per_device=cost.get("bytes accessed", -1.0),
+            collectives=coll,
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", -1),
+                "output_bytes": getattr(mem, "output_size_in_bytes", -1),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", -1),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", -1),
+            },
+            n_devices=int(np.prod(list(mesh.shape.values()))),
+        )
+    except Exception as e:  # noqa: BLE001 — a failed cell is a bug to record
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    _write(out_path, rec)
+    return rec
+
+
+def _write(path: str, rec: Dict[str, Any]) -> None:
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["pod1", "pod2", "both"])
+    ap.add_argument("--abft", default="fused")
+    ap.add_argument("--out", default=RESULTS)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"pod1": [False], "pod2": [True],
+              "both": [False, True]}[args.mesh]
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, multi_pod=mp,
+                               abft_mode=args.abft, out_dir=args.out,
+                               force=args.force)
+                tag = f"{arch:22s} {shape:12s} {'pod2' if mp else 'pod1'}"
+                if rec["status"] == "ok":
+                    n_ok += 1
+                    print(f"OK    {tag} compile={rec['compile_s']}s "
+                          f"flops/dev={rec['flops_per_device']:.3e} "
+                          f"peak={rec['memory']['peak_bytes']/2**30:.2f}GiB "
+                          f"coll(unw)={rec['collectives']['per_device_bytes_unweighted']/2**20:.1f}MiB",
+                          flush=True)
+                elif rec["status"] == "skipped":
+                    n_skip += 1
+                    print(f"SKIP  {tag} — {rec['reason']}", flush=True)
+                else:
+                    n_err += 1
+                    print(f"ERROR {tag} — {rec['error']}", flush=True)
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

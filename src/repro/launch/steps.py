@@ -1,0 +1,102 @@
+"""jit-able train / prefill / decode step factories shared by the drivers
+and the dry-run.  Pure (state, batch) -> (state, metrics) functions; the
+ABFT flag rides in the metrics AND gates state adoption in-graph (a flagged
+step is a no-op, so the runtime guard can retry without corrupting state).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.abft import ABFTConfig
+from repro.models.transformer import (
+    init_decode_state,
+    init_model,
+    lm_loss,
+    model_decode,
+    model_forward,
+    model_prefill,
+)
+from repro.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_warmup,
+    ef_compress_grads,
+)
+
+Array = jax.Array
+
+
+def make_train_step(cfg: ModelConfig, abft: ABFTConfig, opt: AdamWConfig,
+                    *, total_steps: int = 10000, warmup: int = 200,
+                    aux_weight: float = 1e-2, guard_in_graph: bool = True,
+                    compress_grads: bool = False) -> Callable:
+    def train_step(state: Dict[str, Any], batch: Dict[str, Array]
+                   ) -> Tuple[Dict[str, Any], Dict[str, Array]]:
+        def loss_fn(params):
+            fwd_batch = {k: v for k, v in batch.items() if k != "labels"}
+            logits, report, aux = model_forward(params, cfg, fwd_batch, abft)
+            loss = lm_loss(logits, batch["labels"]) + aux_weight * aux
+            return loss, report
+
+        (loss, report), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"])
+        grads, gnorm = clip_by_global_norm(grads, opt.grad_clip)
+        if compress_grads:
+            grads, ef = ef_compress_grads(grads, state["ef"])
+        lr_scale = cosine_warmup(state["opt"]["step"], warmup, total_steps)
+        new_params, new_opt = adamw_update(state["params"], grads,
+                                           state["opt"], opt, lr_scale)
+        if guard_in_graph and abft.enabled:
+            flag = report.flag
+            sel = lambda new, old: jnp.where(flag, old, new)
+            new_params = jax.tree.map(sel, new_params, state["params"])
+            new_opt = jax.tree.map(sel, new_opt, state["opt"])
+        new_state = {"params": new_params, "opt": new_opt}
+        if compress_grads:
+            new_state["ef"] = ef
+        metrics = {
+            "loss": loss.astype(jnp.float32),
+            "grad_norm": gnorm.astype(jnp.float32),
+            "abft_flag": report.flag,
+            "abft_max_rel": report.max_rel,
+            "abft_n_checks": report.n_checks,
+        }
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, abft: ABFTConfig, cache_len: int
+                      ) -> Callable:
+    def prefill(params, batch):
+        logits, states, report = model_prefill(params, cfg, batch, abft,
+                                               cache_len)
+        return logits, states, {"abft_flag": report.flag,
+                                "abft_max_rel": report.max_rel}
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, abft: ABFTConfig) -> Callable:
+    def decode(params, states, tokens, pos):
+        logits, states, report = model_decode(params, cfg, states, tokens,
+                                              pos, abft)
+        return logits, states, {"abft_flag": report.flag,
+                                "abft_max_rel": report.max_rel}
+    return decode
+
+
+def init_train_state(cfg: ModelConfig, key, *, compress_grads: bool = False
+                     ) -> Dict[str, Any]:
+    params = init_model(cfg, key)
+    state = {"params": params, "opt": adamw_init(params)}
+    if compress_grads:
+        state["ef"] = jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    return state

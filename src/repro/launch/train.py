@@ -1,0 +1,97 @@
+"""Training driver.
+
+Reduced configs run directly on CPU (this container); full configs target
+the production mesh (use dryrun.py to validate the distribution plan
+without hardware).
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma-2b \
+        --smoke --steps 100 --abft fused
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, smoke_config
+from repro.core.abft import ABFTConfig
+from repro.data.synthetic import SyntheticLM
+from repro.launch.steps import init_train_state, make_train_step
+from repro.optim import AdamWConfig
+from repro.runtime import ABFTGuard, StragglerWatchdog
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--abft", default="fused",
+                    choices=["none", "split", "fused"])
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default="results/ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    abft = ABFTConfig(mode=args.abft, threshold=5e-2, relative=True)
+
+    state = init_train_state(cfg, jax.random.PRNGKey(0),
+                             compress_grads=args.compress_grads)
+    n = sum(x.size for x in jax.tree.leaves(state["params"]))
+    print(f"arch={cfg.name} params={n/1e6:.2f}M abft={args.abft} "
+          f"compress={args.compress_grads}")
+
+    step_fn = jax.jit(make_train_step(
+        cfg, abft, AdamWConfig(lr=args.lr), total_steps=args.steps,
+        warmup=max(args.steps // 10, 1),
+        compress_grads=args.compress_grads))
+    ckpt = CheckpointManager(args.ckpt_dir, keep=3)
+    restored, at = ckpt.restore(state)
+    start = 0
+    if restored is not None:
+        state, start = restored, at
+        print(f"resumed from step {at}")
+
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                       batch_size=args.batch, seed=0)
+    it = data.batches()
+    guard = ABFTGuard(restore_fn=lambda: ckpt.restore(state)[0])
+    wd = StragglerWatchdog()
+    t0 = time.time()
+    rng = np.random.default_rng(0)
+    for i in range(start, args.steps):
+        batch = {k: jax.numpy.asarray(v) for k, v in next(it).items()}
+        if cfg.family == "encdec":
+            batch["src_embeds"] = jax.numpy.asarray(
+                rng.normal(size=(args.batch, args.seq, cfg.d_model)),
+                jax.numpy.float32)
+        elif cfg.frontend:
+            batch["prefix_embeds"] = jax.numpy.zeros(
+                (args.batch, 8, cfg.d_model), jax.numpy.float32)
+        wd.start()
+        state, m = guard.run_step(lambda s, b=batch: step_fn(s, b), state)
+        wd.stop()
+        if i % 20 == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss={float(m['loss']):.4f} "
+                  f"abft_rel={float(m['abft_max_rel']):.1e}")
+        if i and i % args.ckpt_every == 0:
+            ckpt.save(i, state)
+    ckpt.save(args.steps, state)
+    ckpt.wait()
+    dt = time.time() - t0
+    print(f"done: {args.steps - start} steps, {dt:.1f}s, "
+          f"abft flags {guard.flags}, straggler events {wd.events}")
+
+
+if __name__ == "__main__":
+    main()

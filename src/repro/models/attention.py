@@ -1,0 +1,378 @@
+"""Attention: GQA/MQA, RoPE variants, sliding windows, KV caches — with the
+paper's fused ABFT chain check adapted to streaming (flash) attention.
+
+The ABFT adaptation (DESIGN.md §5): the attention output path is the
+three-matrix chain  O = A · V · W_o  with A = softmax(QKᵀ) playing the role
+of the GCN's adjacency S.  GCN-ABFT's eq. (4) gives
+
+    eᵀ(A V W_o)e  =  (eᵀA) · V · (W_o e)
+
+A streaming softmax never materializes A, so eᵀA is unavailable — but the
+*right* end of the chain is static: fold w_or = W_o·e through V offline into
+an extra "checksum column" vr = V·w_or, and carry ONE extra accumulator in
+the streaming pass:  o_extra = A·vr.  Then Σ_q o_extra = eᵀ(A V W_o)e, the
+fused prediction, at T²·H extra MACs (≈1/head_dim overhead).
+
+Baseline split ABFT *requires* eᵀA, which costs a second scoring pass
+(≈2× score FLOPs) in streaming form — implemented here for the baseline
+comparison (`mode='split'`), quantified in benchmarks/abft_overhead.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.abft import ABFTConfig, Check
+from repro.models.common import apply_rope, cdtype, dense, init_dense
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+NEG = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 4)
+    hd = cfg.hd
+    p = {
+        "wq": init_dense(ks[0], cfg.d_model, (cfg.n_heads, hd), cfg.qkv_bias),
+        "wk": init_dense(ks[1], cfg.d_model, (cfg.n_kv_heads, hd), cfg.qkv_bias),
+        "wv": init_dense(ks[2], cfg.d_model, (cfg.n_kv_heads, hd), cfg.qkv_bias),
+        "wo": init_dense(ks[3], cfg.n_heads * hd, cfg.d_model),
+    }
+    return p
+
+
+def _fold_wo_checkcol(p: Params, cfg: ModelConfig, dtype) -> Array:
+    """w_or[h, hd] = per-head slice of W_o · e (offline in deployment)."""
+    wo = p["wo"]["w"].astype(jnp.float32)            # [H*hd, d]
+    w_or = wo.sum(axis=1).reshape(cfg.n_heads, cfg.hd)
+    return w_or.astype(dtype)
+
+
+def _project_qkv(p: Params, x: Array, kv_x: Array, cfg: ModelConfig,
+                 abft: ABFTConfig) -> Tuple[Array, Array, Array, List[Check]]:
+    q, c1 = dense(p["wq"], x, abft)
+    k, c2 = dense(p["wk"], kv_x, abft)
+    v, c3 = dense(p["wv"], kv_x, abft)
+    return q, k, v, c1 + c2 + c3
+
+
+def _group(q: Array, n_kv: int) -> Array:
+    """[B,T,H,hd] -> [B,T,Kh,G,hd]"""
+    b, t, h, hd = q.shape
+    return q.reshape(b, t, n_kv, h // n_kv, hd)
+
+
+def streaming_attention(
+    q: Array, k: Array, v: Array, vr: Optional[Array], *,
+    q_positions: Array, k_positions: Array, causal: bool, window: int,
+    chunk: int,
+) -> Tuple[Array, Optional[Array], Array, Array]:
+    """Online-softmax attention over KV chunks (never materializes A).
+
+    q: [B,T,H,hd]; k,v: [B,S,Kh,hd]; vr: [B,S,H] fused-ABFT check column.
+    q_positions: [B,T] absolute positions; k_positions: [B,S] (entries > any
+    q position are treated as invalid/future and masked).
+    Returns (o [B,T,H,hd], o_extra [B,T,H] | None, m [B,T,H], l [B,T,H]).
+    """
+    b, t, h, hd = q.shape
+    s = k.shape[1]
+    kh = k.shape[2]
+    g = h // kh
+    qg = _group(q, kh)                                    # [B,T,Kh,G,hd]
+    vrg = vr.reshape(b, s, kh, g) if vr is not None else None
+    scale = hd ** -0.5
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        padw = [(0, 0), (0, pad)] + [(0, 0)] * (k.ndim - 2)
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+        k_positions = jnp.pad(k_positions, [(0, 0), (0, pad)],
+                              constant_values=2**30)
+        if vrg is not None:
+            vrg = jnp.pad(vrg, [(0, 0), (0, pad), (0, 0), (0, 0)])
+
+    has_extra = vrg is not None
+    if n_chunks == 1:
+        # single-shot path (decode T=1, short contexts): no scan, no carry —
+        # with a seq-sharded cache this keeps every collective O(B·H·hd)
+        # instead of all-gathering K/V chunks per scan iteration
+        # (§Perf hillclimb 2).
+        sc = jnp.einsum("btkgh,bskh->btkgs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+        kp_b = k_positions[:, None, None, None, :]
+        qp_b = q_positions[:, :, None, None, None]
+        valid = (kp_b <= qp_b) if causal else (kp_b < 2**30)
+        if window > 0:
+            valid &= kp_b > qp_b - window
+        sc = jnp.where(valid, sc, NEG)
+        m = sc.max(axis=-1)
+        p = jnp.where(valid, jnp.exp(sc - m[..., None]), 0.0)
+        l = p.sum(axis=-1)
+        lsafe = jnp.maximum(l, 1e-30)
+        o = jnp.einsum("btkgs,bskh->btkgh", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32) / lsafe[..., None]
+        o_extra = None
+        if has_extra:
+            ex = jnp.einsum("btkgs,bskg->btkg", p.astype(vrg.dtype), vrg,
+                            preferred_element_type=jnp.float32) / lsafe
+            o_extra = ex.reshape(b, t, h)
+        return (o.reshape(b, t, h, hd), o_extra,
+                m.reshape(b, t, h), l.reshape(b, t, h))
+
+    kc = k.reshape(b, n_chunks, chunk, kh, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, kh, hd).transpose(1, 0, 2, 3, 4)
+    pc = k_positions.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+    if has_extra:
+        vrc = vrg.reshape(b, n_chunks, chunk, kh, g).transpose(1, 0, 2, 3, 4)
+    else:
+        vrc = jnp.zeros((n_chunks, b, 0, kh, g), k.dtype)   # trace-only stub
+
+    m0 = jnp.full((b, t, kh, g), NEG, jnp.float32)
+    l0 = jnp.zeros((b, t, kh, g), jnp.float32)
+    acc0 = jnp.zeros((b, t, kh, g, hd), jnp.float32)
+    ex0 = jnp.zeros((b, t, kh, g), jnp.float32)
+
+    def step(carry, inp):
+        m, l, acc, ex = carry
+        kch, vch, vrch, kp = inp
+        sc = jnp.einsum("btkgh,bskh->btkgs", qg, kch,
+                        preferred_element_type=jnp.float32) * scale
+        valid = jnp.ones_like(sc, bool)
+        kp_b = kp[:, None, None, None, :]                 # [B,1,1,1,c]
+        qp_b = q_positions[:, :, None, None, None]        # [B,T,1,1,1]
+        if causal:
+            valid &= kp_b <= qp_b
+        else:
+            valid &= kp_b < 2**30
+        if window > 0:
+            valid &= kp_b > qp_b - window
+        sc = jnp.where(valid, sc, NEG)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        p = jnp.where(valid, p, 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "btkgs,bskh->btkgh", p.astype(vch.dtype), vch,
+            preferred_element_type=jnp.float32)
+        if has_extra:
+            ex = ex * corr + jnp.einsum(
+                "btkgs,bskg->btkg", p.astype(vrch.dtype), vrch,
+                preferred_element_type=jnp.float32)
+        return (m_new, l, acc, ex), None
+
+    with jax.named_scope("attn_chunk_scan"):
+        (m, l, acc, ex), _ = jax.lax.scan(step, (m0, l0, acc0, ex0),
+                                          (kc, vc, vrc, pc))
+    lsafe = jnp.maximum(l, 1e-30)
+    o = (acc / lsafe[..., None]).reshape(b, t, h, hd)
+    o_extra = (ex / lsafe).reshape(b, t, h) if vr is not None else None
+    return o, o_extra, m.reshape(b, t, h), l.reshape(b, t, h)
+
+
+def _split_second_pass(q, k, v, m, l, *, q_positions, k_positions, causal,
+                       window, chunk, dtype_acc) -> Tuple[Array, Array]:
+    """Second scoring pass for baseline split ABFT: accumulates the predicted
+    checksum (eᵀA)(V e) and nothing else.  Cost ≈ one extra score matmul.
+
+    Returns (predicted [B], actual-is-not-computed-here placeholder).
+    """
+    b, t, h, hd = q.shape
+    s = k.shape[1]
+    kh = k.shape[2]
+    g = h // kh
+    qg = _group(q, kh)
+    scale = hd ** -0.5
+    mg = m.reshape(b, t, kh, g)
+    lg = jnp.maximum(l.reshape(b, t, kh, g), 1e-30)
+    ve = v.astype(jnp.float32).sum(axis=-1)               # [B,S,Kh] = V e
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        k = jnp.pad(k, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        ve = jnp.pad(ve, [(0, 0), (0, pad), (0, 0)])
+        k_positions = jnp.pad(k_positions, [(0, 0), (0, pad)],
+                              constant_values=2**30)
+    kc = k.reshape(b, n_chunks, chunk, kh, hd).transpose(1, 0, 2, 3, 4)
+    vec = ve.reshape(b, n_chunks, chunk, kh).transpose(1, 0, 2, 3)
+    pc = k_positions.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    def step(carry, inp):
+        pred = carry
+        kch, vech, kp = inp
+        sc = jnp.einsum("btkgh,bskh->btkgs", qg, kch,
+                        preferred_element_type=jnp.float32) * scale
+        valid = jnp.ones_like(sc, bool)
+        kp_b = kp[:, None, None, None, :]
+        qp_b = q_positions[:, :, None, None, None]
+        if causal:
+            valid &= kp_b <= qp_b
+        else:
+            valid &= kp_b < 2**30
+        if window > 0:
+            valid &= kp_b > qp_b - window
+        p = jnp.where(valid, jnp.exp(sc - mg[..., None]), 0.0) / lg[..., None]
+        # predicted += Σ_q A[q, s_chunk] · (V e)[s_chunk]
+        pred = pred + jnp.einsum("btkgs,bsk->b", p, vech)
+        return pred, None
+
+    pred, _ = jax.lax.scan(step, jnp.zeros((b,), jnp.float32),
+                           (kc, vec, pc))
+    return pred
+
+
+def attention_block(
+    p: Params, x: Array, cfg: ModelConfig, abft: ABFTConfig, *,
+    kv_x: Optional[Array] = None,
+    positions: Optional[Array] = None,
+    kv_positions: Optional[Array] = None,
+    causal: Optional[bool] = None,
+    window: int = 0,
+    use_rope: bool = True,
+) -> Tuple[Array, List[Check], Tuple[Array, Array, Array]]:
+    """Self- (or cross-) attention for train/prefill.  x: [B,T,d].
+    Also returns (k, v, kv_positions, vr) — roped keys + the fused-check
+    column, for cache building."""
+    b, t, _ = x.shape
+    kv_x = x if kv_x is None else kv_x
+    s = kv_x.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    if kv_positions is None:
+        kv_positions = positions if kv_x is x else \
+            jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    causal = cfg.causal if causal is None else causal
+
+    q, k, v, checks = _project_qkv(p, x, kv_x, cfg, abft)
+    if use_rope and cfg.rope_frac > 0:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_frac)
+        k = apply_rope(k, kv_positions, cfg.rope_theta, cfg.rope_frac)
+
+    vr = None
+    if abft.mode == "fused":
+        w_or = _fold_wo_checkcol(p, cfg, q.dtype)         # [H, hd]
+        g = cfg.kv_groups
+        w_org = w_or.reshape(cfg.n_kv_heads, g, cfg.hd)
+        vr = jnp.einsum("bskh,kgh->bskg", v, w_org).reshape(b, s, cfg.n_heads)
+
+    o, o_extra, m, l = streaming_attention(
+        q, k, v, vr, q_positions=positions, k_positions=kv_positions,
+        causal=causal, window=window, chunk=min(cfg.attn_chunk, s))
+
+    out, oc = dense(p["wo"], o.reshape(b, t, -1).astype(x.dtype),
+                    abft if abft.mode == "split" else
+                    ABFTConfig(mode="none"))
+    checks += oc
+
+    if abft.mode == "fused":
+        pred = o_extra.astype(jnp.float32).sum()
+        actual = out.astype(abft.dtype).sum()
+        checks.append(Check(predicted=pred, actual=actual))
+    elif abft.mode == "split":
+        # second pass for (eᵀA)(V e); actual is Σ O (pre-W_o)
+        pred = _split_second_pass(
+            q, k, v, m, l, q_positions=positions, k_positions=kv_positions,
+            causal=causal, window=window, chunk=min(cfg.attn_chunk, s),
+            dtype_acc=abft.dtype).sum()
+        checks.append(Check(predicted=pred,
+                            actual=o.astype(abft.dtype).sum()))
+    return out, checks, (k, v, kv_positions, vr)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, length: int, dtype) -> Params:
+    """Ring-buffer KV cache for one attention layer.
+
+    ``vr`` is the fused-ABFT check column V·w_or cached *incrementally*
+    (§Perf hillclimb 3): recomputing it over the whole cache per step costs
+    O(S·kh·hd·H); caching it costs H/(2·kh·hd) ≈ 0.4 % extra cache bytes
+    and makes the per-step check O(1) — the paper's offline-checksum-reuse
+    idea applied to the KV cache."""
+    hd = cfg.hd
+    return {
+        "k": jnp.zeros((batch, length, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, length, cfg.n_kv_heads, hd), dtype),
+        "vr": jnp.zeros((batch, length, cfg.n_heads), dtype),
+        "pos": jnp.full((batch, length), 2**30, jnp.int32),  # unwritten -> masked
+    }
+
+
+def _masked_update(buf: Array, new: Array, slot: Array) -> Array:
+    """Ring-buffer write as a one-hot masked blend.  Elementwise over the
+    (possibly seq-sharded) cache — no involuntary resharding, unlike
+    dynamic_update_slice at a traced index (§Perf hillclimb 2)."""
+    length = buf.shape[1]
+    oh = (jnp.arange(length) == slot)
+    oh = oh.reshape((1, length) + (1,) * (buf.ndim - 2))
+    return jnp.where(oh, new.astype(buf.dtype), buf)
+
+
+def attention_decode(
+    p: Params, x: Array, cache: Params, pos: Array, cfg: ModelConfig,
+    abft: ABFTConfig, *, window: int = 0, use_rope: bool = True,
+) -> Tuple[Array, Params, List[Check]]:
+    """One-token decode.  x: [B,1,d]; pos: scalar int32 (current position).
+    The cache is a ring buffer of fixed length; `pos` entries give absolute
+    positions for RoPE-free masking."""
+    b = x.shape[0]
+    length = cache["k"].shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+
+    q, c1 = dense(p["wq"], x, abft)
+    k_new, c2 = dense(p["wk"], x, abft)
+    v_new, c3 = dense(p["wv"], x, abft)
+    checks = c1 + c2 + c3
+    if use_rope and cfg.rope_frac > 0:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_frac)
+        k_new = apply_rope(k_new, positions, cfg.rope_theta, cfg.rope_frac)
+
+    slot = jnp.mod(pos, length)
+    # masked one-hot ring-buffer writes (§Perf hillclimb 2): elementwise over
+    # the seq-sharded cache, no involuntary resharding
+    k = _masked_update(cache["k"], k_new, slot)
+    v = _masked_update(cache["v"], v_new, slot)
+    kpos = _masked_update(cache["pos"][..., None],
+                          jnp.broadcast_to(pos, (b, 1, 1)).astype(jnp.int32),
+                          slot)[..., 0]
+    new_cache = {"k": k, "v": v, "pos": kpos, "vr": cache["vr"]}
+
+    vr = None
+    if abft.mode == "fused":
+        # incremental check-column update (§Perf hillclimb 3): fold w_or
+        # through the NEW token's V only; history is already cached.
+        w_or = _fold_wo_checkcol(p, cfg, q.dtype)
+        g = cfg.kv_groups
+        w_org = w_or.reshape(cfg.n_kv_heads, g, cfg.hd)
+        vr_new = jnp.einsum("bskh,kgh->bskg", v_new.astype(q.dtype),
+                            w_org).reshape(b, 1, cfg.n_heads)
+        vr = _masked_update(cache["vr"], vr_new, slot)
+        new_cache["vr"] = vr
+        vr = vr.astype(q.dtype)
+
+    # single-shot attention for T=1 (chunk = full length -> no scan)
+    o, o_extra, m, l = streaming_attention(
+        q, k, v, vr, q_positions=positions, k_positions=kpos,
+        causal=True, window=window, chunk=length)
+
+    out, oc = dense(p["wo"], o.reshape(b, 1, -1).astype(x.dtype),
+                    abft if abft.mode == "split" else ABFTConfig(mode="none"))
+    checks += oc
+    if abft.mode == "fused":
+        checks.append(Check(predicted=o_extra.astype(jnp.float32).sum(),
+                            actual=out.astype(abft.dtype).sum()))
+    elif abft.mode == "split":
+        pred = _split_second_pass(
+            q, k, v, m, l, q_positions=positions, k_positions=kpos,
+            causal=True, window=window, chunk=min(cfg.attn_chunk, length),
+            dtype_acc=abft.dtype).sum()
+        checks.append(Check(predicted=pred, actual=o.astype(abft.dtype).sum()))
+    return out, new_cache, checks

@@ -1,0 +1,165 @@
+"""Shared model components: norms, activations, RoPE, dense layers, embeds.
+
+Pure-functional style: ``init_*`` builds param subtrees from a PRNG key;
+``apply`` functions are stateless.  All matmul-bearing blocks accept an
+:class:`~repro.core.abft.ABFTConfig` and return the checks they performed, so
+ABFT threads through the entire model without globals.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.abft import ABFTConfig, Check, check_matmul
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# initializers — params are stored in float32; compute casts per-config.
+# ---------------------------------------------------------------------------
+
+def trunc_normal(key, shape, std):
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+
+
+def init_dense(key, d_in: int, d_out: Tuple[int, ...] | int, bias: bool = False):
+    if isinstance(d_out, int):
+        d_out = (d_out,)
+    w = trunc_normal(key, (d_in, *d_out), std=1.0 / math.sqrt(d_in))
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros(d_out, jnp.float32)
+    return p
+
+
+def init_norm(d: int):
+    return {"scale": jnp.zeros((d,), jnp.float32)}   # offset-style (gemma (1+w))
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, p: Params, eps: float, offset_base: float = 1.0) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * (offset_base + p["scale"])
+    return y.astype(dt)
+
+
+def layer_norm(x: Array, p: Params, eps: float) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * (1.0 + p["scale"])
+    if "bias" in p:
+        y = y + p["bias"]
+    return y.astype(dt)
+
+
+def norm_apply(x: Array, p: Params, cfg) -> Array:
+    if getattr(cfg, "norm", "rms") == "ln":
+        return layer_norm(x, p, cfg.norm_eps)
+    return rms_norm(x, p, cfg.norm_eps)
+
+
+def sinusoid_positions(positions: Array, d: int, dtype) -> Array:
+    """[B,T] -> [B,T,d] standard transformer sinusoids."""
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def act_fn(name: str):
+    return {"gelu": jax.nn.gelu, "silu": jax.nn.silu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE (full / partial "2d" à la ChatGLM / none)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd_rot: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd_rot, 2, dtype=jnp.float32) / hd_rot))
+
+
+def apply_rope(x: Array, positions: Array, theta: float, frac: float = 1.0) -> Array:
+    """x: [B, T, H, hd]; positions: [B, T].  frac < 1 rotates only the first
+    frac*hd dims (ChatGLM-style partial/2d RoPE)."""
+    hd = x.shape[-1]
+    hd_rot = int(hd * frac)
+    hd_rot -= hd_rot % 2
+    if hd_rot == 0:
+        return x
+    xr, xp = x[..., :hd_rot], x[..., hd_rot:]
+    freqs = rope_freqs(hd_rot, theta)                       # [hd_rot/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B,T,hd_rot/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    xr = jnp.stack([out1, out2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([xr, xp], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d: int):
+    return {"table": trunc_normal(key, (vocab, d), std=1.0)}
+
+
+def embed(p: Params, tokens: Array, cfg: ModelConfig) -> Array:
+    x = jnp.take(p["table"], tokens, axis=0).astype(cdtype(cfg))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed(p: Params, x: Array, cfg: ModelConfig,
+            abft: ABFTConfig) -> Tuple[Array, List[Check]]:
+    w = p["table"].astype(cdtype(cfg)) if "table" in p else p["w"].astype(cdtype(cfg))
+    logits = jnp.einsum("btd,vd->btv", x, w) if "table" in p else \
+        jnp.einsum("btd,dv->btv", x, w)
+    checks: List[Check] = []
+    if abft.enabled:
+        wt = w.T if "table" in p else w
+        checks.append(check_matmul(x.reshape(-1, x.shape[-1]), wt,
+                                   logits.reshape(-1, logits.shape[-1]), abft))
+    return logits.astype(jnp.float32), checks
+
+
+# ---------------------------------------------------------------------------
+# checked dense application (split-ABFT unit for isolated matmuls)
+# ---------------------------------------------------------------------------
+
+def dense(p: Params, x: Array, abft: ABFTConfig,
+          out_axes: int = 1) -> Tuple[Array, List[Check]]:
+    """y = x @ w (+ b).  x: [..., d_in]; w: [d_in, *out].  The ABFT check runs
+    on the 2-D flattened product — one scalar per call."""
+    w = p["w"].astype(x.dtype)
+    d_in = w.shape[0]
+    out_shape = w.shape[1:]
+    x2 = x.reshape(-1, d_in)
+    w2 = w.reshape(d_in, -1)
+    y2 = x2 @ w2
+    checks: List[Check] = []
+    if abft.enabled:
+        checks.append(check_matmul(x2, w2, y2, abft))
+    y = y2.reshape(*x.shape[:-1], *out_shape)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y, checks

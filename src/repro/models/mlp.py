@@ -1,0 +1,51 @@
+"""MLP blocks (gated and plain) with split ABFT checks per matmul.
+
+The nonlinearity between up- and down-projection breaks the linear chain, so
+— exactly as the paper prescribes — each matmul is checked individually (the
+fused form applies only to uninterrupted matrix chains).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.abft import ABFTConfig, Check
+from repro.models.common import dense, init_dense
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int = 0) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        return {
+            "wi": init_dense(ks[0], cfg.d_model, d_ff),
+            "wg": init_dense(ks[1], cfg.d_model, d_ff),
+            "wo": init_dense(ks[2], d_ff, cfg.d_model),
+        }
+    return {
+        "wi": init_dense(ks[0], cfg.d_model, d_ff),
+        "wo": init_dense(ks[2], d_ff, cfg.d_model),
+    }
+
+
+def mlp_block(p: Params, x: Array, cfg: ModelConfig, abft: ABFTConfig
+              ) -> Tuple[Array, List[Check]]:
+    checks: List[Check] = []
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        up, c1 = dense(p["wi"], x, abft)
+        gate, c2 = dense(p["wg"], x, abft)
+        act = jax.nn.silu if cfg.mlp_act == "swiglu" else jax.nn.gelu
+        h = act(gate) * up
+        checks += c1 + c2
+    else:
+        h, c1 = dense(p["wi"], x, abft)
+        h = jax.nn.gelu(h)
+        checks += c1
+    out, c3 = dense(p["wo"], h, abft)
+    return out, checks + c3

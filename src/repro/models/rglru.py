@@ -1,0 +1,129 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+    i_t = sigmoid(W_x x_t)         input gate
+    r_t = sigmoid(W_a x_t)         recurrence gate
+    a_t = exp(-c · softplus(Λ) · r_t)          per-channel decay, c = 8
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+The full block is: proj-in → conv1d(width 4) → RG-LRU  (gated by a parallel
+GeLU branch) → proj-out.  Same ABFT applicability note as RWKV6: the
+data-dependent diagonal recurrence breaks the fused chain; projections carry
+split checks.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.abft import ABFTConfig, Check
+from repro.models.common import dense, init_dense, trunc_normal
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+RGLRU_C = 8.0
+GATE_BLOCKS = 16       # Griffin uses block-diagonal gate matrices; blocks
+                       # align with the model axis -> gate matmuls are local
+                       # under dr-sharding (§Perf iteration 5)
+
+
+def _d_rnn(cfg: ModelConfig) -> int:
+    return cfg.rglru_d or cfg.d_model
+
+
+def init_rglru_block(key, cfg: ModelConfig) -> Params:
+    d, dr = cfg.d_model, _d_rnn(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "proj_x": init_dense(ks[0], d, dr),
+        "proj_gate": init_dense(ks[1], d, dr),
+        "proj_out": init_dense(ks[2], dr, d),
+        "conv_w": trunc_normal(ks[3], (cfg.conv1d_width, dr), std=0.3),
+        "conv_b": jnp.zeros((dr,), jnp.float32),
+        "gate_x": {"w": trunc_normal(ks[4], (GATE_BLOCKS, dr // GATE_BLOCKS,
+                                             dr // GATE_BLOCKS),
+                                      std=(dr // GATE_BLOCKS) ** -0.5)},
+        "gate_a": {"w": trunc_normal(ks[5], (GATE_BLOCKS, dr // GATE_BLOCKS,
+                                             dr // GATE_BLOCKS),
+                                      std=(dr // GATE_BLOCKS) ** -0.5)},
+        # Λ init so that softplus(Λ)·c gives decays in a useful range
+        "lam": jnp.linspace(0.3, 1.5, dr).astype(jnp.float32),
+    }
+
+
+def _conv1d(x: Array, w: Array, b: Array, x_hist: Array) -> Tuple[Array, Array]:
+    """Causal depthwise conv, width K.  x: [B,T,dr]; x_hist: [B,K-1,dr] from
+    the previous segment.  Returns (y, new_hist)."""
+    k = w.shape[0]
+    xfull = jnp.concatenate([x_hist.astype(x.dtype), x], axis=1)
+    y = sum(xfull[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(k))
+    y = y + b.astype(x.dtype)
+    return y, xfull[:, -(k - 1):, :] if k > 1 else x_hist
+
+
+def _rglru_scan(x: Array, i_gate: Array, a: Array, h0: Array
+                ) -> Tuple[Array, Array]:
+    """h_t = a_t h_{t-1} + sqrt(1-a_t²)(i_t ⊙ x_t).  All [B,T,dr]."""
+    gx = (i_gate * x * jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-9)
+                                ).astype(x.dtype))
+
+    def step(h, inp):
+        at, gxt = inp
+        h = at * h + gxt
+        return h, h
+
+    aT = a.transpose(1, 0, 2).astype(jnp.float32)
+    gT = gx.transpose(1, 0, 2).astype(jnp.float32)
+    with jax.named_scope("time_scan"):
+        h, ys = jax.lax.scan(step, h0, (aT, gT))
+    return ys.transpose(1, 0, 2), h
+
+
+def _block_diag_dense(p: Params, x: Array, abft: ABFTConfig):
+    """y[..., n, s] = x[..., n, r] @ w[n, r, s]  (block-diagonal gates)."""
+    from repro.core.abft import Check
+    nb, r, _ = p["w"].shape
+    xb = x.reshape(*x.shape[:-1], nb, r)
+    w = p["w"].astype(x.dtype)
+    y = jnp.einsum("btnr,nrs->btns", xb, w)
+    checks = []
+    if abft.enabled:
+        pred = jnp.einsum("nr,nrs->", xb.astype(abft.dtype).sum((0, 1)),
+                          w.astype(abft.dtype))
+        checks.append(Check(predicted=pred, actual=y.astype(abft.dtype).sum()))
+    return y.reshape(x.shape), checks
+
+
+def rglru_block(p: Params, x: Array, cfg: ModelConfig, abft: ABFTConfig,
+                state: Dict[str, Array]
+                ) -> Tuple[Array, Dict[str, Array], List[Check]]:
+    """x: [B,T,d]; state = {'h': [B,dr] f32, 'conv': [B,K-1,dr]}."""
+    xr, c1 = dense(p["proj_x"], x, abft)
+    gate, c2 = dense(p["proj_gate"], x, abft)
+    xr, conv_hist = _conv1d(xr, p["conv_w"], p["conv_b"], state["conv"])
+
+    ig, c3 = _block_diag_dense(p["gate_x"], xr, abft)
+    rg, c4 = _block_diag_dense(p["gate_a"], xr, abft)
+    i_gate = jax.nn.sigmoid(ig)
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"]).astype(jnp.float32) * \
+        jax.nn.sigmoid(rg.astype(jnp.float32))
+    a = jnp.exp(log_a)
+
+    ys, h = _rglru_scan(xr, i_gate, a.astype(xr.dtype), state["h"])
+    out = ys.astype(x.dtype) * jax.nn.gelu(gate)
+    y, c5 = dense(p["proj_out"], out, abft)
+    new_state = {"h": h, "conv": conv_hist.astype(state["conv"].dtype)}
+    return y, new_state, c1 + c2 + c3 + c4 + c5
+
+
+def rglru_state_init(cfg: ModelConfig, batch: int) -> Dict[str, Array]:
+    dr = _d_rnn(cfg)
+    return {
+        "h": jnp.zeros((batch, dr), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv1d_width - 1, dr), jnp.float32),
+    }

@@ -1,0 +1,153 @@
+"""RWKV6 ("Finch") time-mix + channel-mix blocks.
+
+Data-dependent per-channel decay makes the recurrence a product of
+*data-dependent diagonal* maps — the fused GCN-ABFT chain does not factor
+through it (DESIGN.md §Arch-applicability), so the projections (r/k/v/g/o,
+channel-mix) carry split ABFT checks and the recurrence itself is unchecked.
+
+State per head: S [hd, hd];   wkv_t = S_{t-1} + diag(u) kᵀ_t v_t
+                              out_t = r_t · wkv_t
+                              S_t   = diag(w_t) S_{t-1} + kᵀ_t v_t
+with w_t = exp(-exp(w0 + lora_w(x̄_t))) (data-dependent decay).
+Token-shift lerps use the RWKV6 low-rank data-dependent form.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.abft import ABFTConfig, Check
+from repro.models.common import dense, init_dense, trunc_normal
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+HEAD_SIZE = 64
+LORA_R = 32
+
+
+def _heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // HEAD_SIZE
+
+
+def init_rwkv_time_mix(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 12)
+    return {
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),       # r,k,v,g,w lerp bases
+        "lora_a": trunc_normal(ks[0], (d, 5, LORA_R), std=d ** -0.5),
+        "lora_b": trunc_normal(ks[1], (5, LORA_R, d), std=LORA_R ** -0.5),
+        "wr": init_dense(ks[2], d, d),
+        "wk": init_dense(ks[3], d, d),
+        "wv": init_dense(ks[4], d, d),
+        "wg": init_dense(ks[5], d, d),
+        "wo": init_dense(ks[6], d, d),
+        "w0": jnp.full((d,), -5.0, jnp.float32),          # decay base
+        "w_lora_a": trunc_normal(ks[7], (d, LORA_R), std=d ** -0.5),
+        "w_lora_b": trunc_normal(ks[8], (LORA_R, d), std=LORA_R ** -0.5),
+        "u": trunc_normal(ks[9], (d,), std=0.5),          # current-token bonus
+        "ln_scale": jnp.ones((d,), jnp.float32),          # per-head groupnorm
+    }
+
+
+def init_rwkv_channel_mix(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "mu": 0.5 * jnp.ones((2, cfg.d_model), jnp.float32),
+        "wk": init_dense(ks[0], cfg.d_model, cfg.d_ff),
+        "wv": init_dense(ks[1], cfg.d_ff, cfg.d_model),
+    }
+
+
+def _ddlerp(p: Params, x: Array, x_prev: Array) -> Tuple[Array, ...]:
+    """RWKV6 data-dependent token-shift: 5 mixed streams (r,k,v,g,w)."""
+    dxprev = x_prev - x
+    base = x + dxprev * p["mu"][:, None, None, :].astype(x.dtype)  # [5,B,T,d]
+    lora = jnp.einsum("btd,dfr->fbtr", x + 0.5 * dxprev,
+                      p["lora_a"].astype(x.dtype))
+    adj = jnp.einsum("fbtr,frd->fbtd", jnp.tanh(lora),
+                     p["lora_b"].astype(x.dtype))         # [5,B,T,d]
+    mixed = base + dxprev[None] * adj
+    return tuple(mixed[i] for i in range(5))
+
+
+def _wkv_scan(r: Array, k: Array, v: Array, w: Array, u: Array,
+              state0: Array) -> Tuple[Array, Array]:
+    """Sequential WKV recurrence.  r,k,v: [B,T,H,hd]; w: [B,T,H,hd] decay in
+    (0,1); u: [H,hd]; state0: [B,H,hd,hd].  Returns (out [B,T,H,hd], state)."""
+    def step(s, inp):
+        rt, kt, vt, wt = inp                              # [B,H,hd]
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        wkv = s + u[None, :, :, None] * kv
+        out = jnp.einsum("bhk,bhkv->bhv", rt, wkv)
+        s = wt[..., None] * s + kv
+        return s, out
+
+    rs, ks_, vs, ws = (a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    with jax.named_scope("time_scan"):
+        state, outs = jax.lax.scan(step, state0, (rs, ks_, vs, ws))
+    return outs.transpose(1, 0, 2, 3), state
+
+
+def rwkv_time_mix(p: Params, x: Array, cfg: ModelConfig, abft: ABFTConfig,
+                  x_prev: Array, state0: Array
+                  ) -> Tuple[Array, Array, Array, List[Check]]:
+    """x: [B,T,d]; x_prev: [B,d] (last token of previous segment);
+    state0: [B,H,hd,hd].  Returns (out, last_x, state, checks)."""
+    b, t, d = x.shape
+    h = _heads(cfg)
+    shifted = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    xr, xk, xv, xg, xw = _ddlerp(p, x, shifted)
+
+    r, c1 = dense(p["wr"], xr, abft)
+    k, c2 = dense(p["wk"], xk, abft)
+    v, c3 = dense(p["wv"], xv, abft)
+    g, c4 = dense(p["wg"], xg, abft)
+    dw = jnp.tanh(xw @ p["w_lora_a"].astype(x.dtype)) @ \
+        p["w_lora_b"].astype(x.dtype)
+    w = jnp.exp(-jnp.exp((p["w0"].astype(jnp.float32) +
+                          dw.astype(jnp.float32))))       # (0,1) decay
+
+    hd = HEAD_SIZE
+    rh = r.reshape(b, t, h, hd).astype(jnp.float32)
+    kh = k.reshape(b, t, h, hd).astype(jnp.float32)
+    vh = v.reshape(b, t, h, hd).astype(jnp.float32)
+    wh = w.reshape(b, t, h, hd)
+    u = p["u"].reshape(h, hd).astype(jnp.float32)
+    out, state = _wkv_scan(rh, kh, vh, wh, u, state0)
+
+    # per-head group-norm
+    mu = out.mean(-1, keepdims=True)
+    var = out.var(-1, keepdims=True)
+    out = (out - mu) * jax.lax.rsqrt(var + 1e-5)
+    out = out.reshape(b, t, d).astype(x.dtype) * \
+        p["ln_scale"].astype(x.dtype)
+    out = out * jax.nn.silu(g)
+    y, c5 = dense(p["wo"], out, abft)
+    return y, x[:, -1], state, c1 + c2 + c3 + c4 + c5
+
+
+def rwkv_channel_mix(p: Params, x: Array, cfg: ModelConfig, abft: ABFTConfig,
+                     x_prev: Array) -> Tuple[Array, Array, List[Check]]:
+    b, t, d = x.shape
+    shifted = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    dxprev = shifted - x
+    xk = x + dxprev * p["mu"][0].astype(x.dtype)
+    xv = x + dxprev * p["mu"][1].astype(x.dtype)
+    k, c1 = dense(p["wk"], xk, abft)
+    k = jnp.square(jax.nn.relu(k))
+    out, c2 = dense(p["wv"], k, abft)
+    _ = xv  # RWKV6 channel-mix receptance folded into residual scale
+    return out, x[:, -1], c1 + c2
+
+
+def rwkv_state_init(cfg: ModelConfig, batch: int) -> Dict[str, Array]:
+    h = _heads(cfg)
+    return {
+        "wkv": jnp.zeros((batch, h, HEAD_SIZE, HEAD_SIZE), jnp.float32),
+        "x_tm": jnp.zeros((batch, cfg.d_model), jnp.float32),
+        "x_cm": jnp.zeros((batch, cfg.d_model), jnp.float32),
+    }

@@ -1,0 +1,612 @@
+"""Model assembly: scanned decoder stacks, encoder-decoder, hybrids.
+
+Layer stacks are grouped into *segments* of a repeating block-pattern unit
+(e.g. RecurrentGemma's (rglru, rglru, attn)); each segment's per-unit params
+are stacked on a leading axis and applied with ``lax.scan`` so HLO size and
+compile time stay bounded at 48-layer/30B scale.  A trailing partial unit
+(38 = 12×3 + 2) becomes its own segment.
+
+Everything returns (value, checks, aux): ABFT checks flow out of every block
+and are reduced once per step into a replicated ABFTReport.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.abft import ABFTConfig, ABFTReport, Check, merge_reports, summarize
+from repro.models.attention import (
+    attention_block,
+    attention_decode,
+    init_attention,
+    init_cache,
+)
+from repro.models.common import (
+    cdtype,
+    dense,
+    embed,
+    init_dense,
+    init_embed,
+    init_norm,
+    norm_apply,
+    sinusoid_positions,
+)
+from repro.models.mlp import init_mlp, mlp_block
+from repro.models.moe import init_moe, moe_block
+from repro.models.rglru import init_rglru_block, rglru_block, rglru_state_init
+from repro.models.rwkv6 import (
+    init_rwkv_channel_mix,
+    init_rwkv_time_mix,
+    rwkv_state_init,
+    rwkv_time_mix,
+    rwkv_channel_mix,
+)
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def constrain_batch(x: Array) -> Array:
+    """Pin activations to (batch-sharded, replicated...) at block boundaries.
+
+    §Perf iteration 4: without anchors, GSPMD propagates FSDP weight specs
+    into the residual stream; on gemma train_4k the LM-head dot then ran
+    with a globally-replicated batch ([1M, 16000] per-device dot + 3×62.5
+    GiB collectives).  Anchoring the stream keeps every weight-FSDP
+    resolution on the weight side (all-gather MBs, not activation GiBs).
+
+    Uses a bare PartitionSpec resolved against the ambient mesh context;
+    trace-time no-op when no mesh (CPU tests/examples) — the axis-name
+    probe order tries the multi-pod spec first.
+    """
+    from jax.sharding import PartitionSpec
+    for dp in (("pod", "data"), "data"):
+        try:
+            spec = PartitionSpec(dp, *(None,) * (x.ndim - 1))
+            return jax.lax.with_sharding_constraint(x, spec)
+        except Exception:
+            continue
+    return x
+
+
+def seg_structure(cfg: ModelConfig) -> List[Tuple[Tuple[str, ...], int]]:
+    bp, L = cfg.block_pattern, cfg.n_layers
+    P = len(bp)
+    segs: List[Tuple[Tuple[str, ...], int]] = []
+    if L // P:
+        segs.append((bp, L // P))
+    if L % P:
+        segs.append((bp[: L % P], 1))
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, btype: str, cross: bool) -> Params:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p: Params = {"ln1": init_norm(d), "ln2": init_norm(d)}
+    if btype == "attn":
+        p["attn"] = init_attention(ks[0], cfg)
+    elif btype == "rglru":
+        p["rglru"] = init_rglru_block(ks[0], cfg)
+    elif btype == "rwkv":
+        p["tm"] = init_rwkv_time_mix(ks[0], cfg)
+    else:
+        raise ValueError(btype)
+    if btype == "rwkv":
+        p["cm"] = init_rwkv_channel_mix(ks[1], cfg)
+    elif cfg.moe is not None:
+        p["moe"] = init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg)
+    if cross:
+        p["lnx"] = init_norm(d)
+        p["xattn"] = init_attention(ks[2], cfg, cross=True)
+    return p
+
+
+def init_unit(key, cfg: ModelConfig, pattern: Tuple[str, ...], cross: bool
+              ) -> Params:
+    ks = jax.random.split(key, len(pattern))
+    return {f"b{i}": init_layer(ks[i], cfg, bt, cross)
+            for i, bt in enumerate(pattern)}
+
+
+def init_model(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {"embed": init_embed(ks[0], cfg.padded_vocab, cfg.d_model)}
+    cross = cfg.family == "encdec"
+    segs = seg_structure(cfg)
+    seg_params = []
+    for i, (pattern, count) in enumerate(segs):
+        kseg = jax.random.split(jax.random.fold_in(ks[1], i), count)
+        unit_init = partial(init_unit, cfg=cfg, pattern=pattern, cross=cross)
+        seg_params.append(jax.vmap(lambda k: unit_init(k))(kseg))
+    p["segments"] = seg_params
+    p["final_norm"] = init_norm(cfg.d_model)
+    if not cfg.tie_embeddings:
+        p["head"] = init_dense(ks[2], cfg.d_model, cfg.padded_vocab)
+    if cross:
+        enc_cfg = encoder_cfg(cfg)
+        esegs = seg_structure(enc_cfg)
+        ep = []
+        for i, (pattern, count) in enumerate(esegs):
+            kseg = jax.random.split(jax.random.fold_in(ks[3], i), count)
+            ep.append(jax.vmap(
+                lambda k: init_unit(k, enc_cfg, pattern, False))(kseg))
+        p["encoder"] = {"segments": ep, "final_norm": init_norm(cfg.d_model)}
+    return p
+
+
+def encoder_cfg(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(
+        cfg, n_layers=cfg.enc_layers, causal=False, rope_frac=0.0,
+        block_pattern=("attn",), moe=None, window=0)
+
+
+# ---------------------------------------------------------------------------
+# layer application (full-sequence mode: train / prefill)
+# ---------------------------------------------------------------------------
+
+def layer_state_init(cfg: ModelConfig, btype: str, batch: int, cache_len: int,
+                     dtype, cross: bool) -> Params:
+    if btype == "attn":
+        st = init_cache(cfg, batch, cache_len, dtype)
+        if cross:
+            st["xk"] = jnp.zeros((batch, cache_len, cfg.n_kv_heads, cfg.hd), dtype)
+            st["xv"] = jnp.zeros((batch, cache_len, cfg.n_kv_heads, cfg.hd), dtype)
+            st["xvr"] = jnp.zeros((batch, cache_len, cfg.n_heads), dtype)
+        return st
+    if btype == "rglru":
+        st = rglru_state_init(cfg, batch)
+    else:
+        st = rwkv_state_init(cfg, batch)
+    if cross:
+        st["xk"] = jnp.zeros((batch, cache_len, cfg.n_kv_heads, cfg.hd), dtype)
+        st["xv"] = jnp.zeros((batch, cache_len, cfg.n_kv_heads, cfg.hd), dtype)
+    return st
+
+
+def _zero_recurrent_state(cfg: ModelConfig, btype: str, batch: int):
+    if btype == "rglru":
+        return rglru_state_init(cfg, batch)
+    if btype == "rwkv":
+        return rwkv_state_init(cfg, batch)
+    return None
+
+
+def layer_apply_seq(lp: Params, x: Array, btype: str, cfg: ModelConfig,
+                    abft: ABFTConfig, positions: Array,
+                    enc_out: Optional[Array], state: Optional[Params],
+                    build_cache: bool, cache_len: int
+                    ) -> Tuple[Array, List[Check], Array, Optional[Params]]:
+    """Returns (x, checks, aux_loss, new_state_or_cache)."""
+    checks: List[Check] = []
+    aux = jnp.zeros((), jnp.float32)
+    b, t, _ = x.shape
+    new_state: Optional[Params] = None
+
+    if btype == "rwkv":
+        st = state or rwkv_state_init(cfg, b)
+        h = norm_apply(x, lp["ln1"], cfg)
+        y, x_tm, wkv, cs = rwkv_time_mix(lp["tm"], h, cfg, abft,
+                                         st["x_tm"].astype(h.dtype), st["wkv"])
+        x = x + y
+        checks += cs
+        h = norm_apply(x, lp["ln2"], cfg)
+        y, x_cm, cs = rwkv_channel_mix(lp["cm"], h, cfg, abft,
+                                       st["x_cm"].astype(h.dtype))
+        x = x + y
+        checks += cs
+        if build_cache:
+            new_state = {"wkv": wkv, "x_tm": x_tm.astype(jnp.float32),
+                         "x_cm": x_cm.astype(jnp.float32)}
+    elif btype == "rglru":
+        st = state or rglru_state_init(cfg, b)
+        h = norm_apply(x, lp["ln1"], cfg)
+        y, rgst, cs = rglru_block(lp["rglru"], h, cfg, abft, st)
+        x = x + y
+        checks += cs
+        h = norm_apply(x, lp["ln2"], cfg)
+        y, cs = mlp_block(lp["mlp"], h, cfg, abft)
+        x = x + y
+        checks += cs
+        if build_cache:
+            new_state = rgst
+    else:  # attn
+        window = cfg.window
+        if len(cfg.block_pattern) > 1:      # hybrid: local attention
+            window = cfg.local_window
+        h = norm_apply(x, lp["ln1"], cfg)
+        y, cs, (k, v, kpos, vr) = attention_block(
+            lp["attn"], h, cfg, abft, positions=positions, window=window)
+        x = x + y
+        checks += cs
+        if enc_out is not None:
+            h = norm_apply(x, lp["lnx"], cfg)
+            y, cs, (xk, xv, _, xvr) = attention_block(
+                lp["xattn"], h, cfg, abft, kv_x=enc_out, positions=positions,
+                causal=False, use_rope=False)
+            x = x + y
+            checks += cs
+        h = norm_apply(x, lp["ln2"], cfg)
+        if "moe" in lp:
+            y, cs, aux = moe_block(lp["moe"], h, cfg, abft)
+        else:
+            y, cs = mlp_block(lp["mlp"], h, cfg, abft)
+        x = x + y
+        checks += cs
+        if build_cache:
+            pad = cache_len - t
+            if vr is None:
+                vr = jnp.zeros((*k.shape[:2], cfg.n_heads), k.dtype)
+            new_state = {
+                "k": jnp.pad(k, [(0, 0), (0, pad), (0, 0), (0, 0)]),
+                "v": jnp.pad(v, [(0, 0), (0, pad), (0, 0), (0, 0)]),
+                "vr": jnp.pad(vr.astype(k.dtype),
+                              [(0, 0), (0, pad), (0, 0)]),
+                "pos": jnp.pad(kpos.astype(jnp.int32), [(0, 0), (0, pad)],
+                               constant_values=2 ** 30),  # unwritten -> masked
+            }
+            if enc_out is not None:
+                new_state["xk"] = xk
+                new_state["xv"] = xv
+                new_state["xvr"] = (xvr.astype(k.dtype) if xvr is not None
+                                    else jnp.zeros((*xk.shape[:2],
+                                                    cfg.n_heads), k.dtype))
+    return x, checks, aux, new_state
+
+
+def layer_apply_decode(lp: Params, x: Array, btype: str, cfg: ModelConfig,
+                       abft: ABFTConfig, pos: Array, state: Params
+                       ) -> Tuple[Array, List[Check], Params]:
+    checks: List[Check] = []
+    b = x.shape[0]
+    if btype in ("rwkv", "rglru"):
+        positions = jnp.full((b, 1), pos, jnp.int32)
+        x, checks, _, new_state = layer_apply_seq(
+            lp, x, btype, cfg, abft, positions, None, state,
+            build_cache=True, cache_len=1)
+        # carry over cross-attn keys untouched if present
+        for key in ("xk", "xv"):
+            if key in state:
+                new_state[key] = state[key]
+        return x, checks, new_state
+    window = cfg.window
+    if len(cfg.block_pattern) > 1:
+        window = cfg.local_window
+    h = norm_apply(x, lp["ln1"], cfg)
+    y, new_state, cs = attention_decode(lp["attn"], h, state, pos, cfg, abft,
+                                        window=window)
+    x = x + y
+    checks += cs
+    if "xattn" in lp:
+        h = norm_apply(x, lp["lnx"], cfg)
+        # cross-attention over the static encoder cache
+        s = state["xk"].shape[1]
+        kvpos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        q, c1 = dense(lp["xattn"]["wq"], h, abft)
+        from repro.models.attention import streaming_attention, _fold_wo_checkcol
+        vr = None
+        if abft.mode == "fused":
+            vr = state["xvr"].astype(q.dtype)   # static cross check column
+        o, o_extra, _, _ = streaming_attention(
+            q, state["xk"], state["xv"], vr,
+            q_positions=jnp.full((b, 1), pos, jnp.int32),
+            k_positions=kvpos, causal=False, window=0,
+            chunk=min(cfg.attn_chunk, s))
+        y, c2 = dense(lp["xattn"]["wo"], o.reshape(b, 1, -1).astype(x.dtype),
+                      abft if abft.mode == "split" else ABFTConfig(mode="none"))
+        checks += c1 + c2
+        if abft.mode == "fused":
+            checks.append(Check(predicted=o_extra.astype(jnp.float32).sum(),
+                                actual=y.astype(abft.dtype).sum()))
+        x = x + y
+        new_state = dict(new_state)
+        new_state["xk"] = state["xk"]
+        new_state["xv"] = state["xv"]
+        new_state["xvr"] = state["xvr"]
+    h = norm_apply(x, lp["ln2"], cfg)
+    if "moe" in lp:
+        y, cs, _ = moe_block(lp["moe"], h, cfg, abft)
+    else:
+        y, cs = mlp_block(lp["mlp"], h, cfg, abft)
+    x = x + y
+    checks += cs
+    return x, checks, new_state
+
+
+# ---------------------------------------------------------------------------
+# segment application with lax.scan over stacked units
+# ---------------------------------------------------------------------------
+
+def _apply_unit_seq(unit_p, x, pattern, cfg, abft, positions, enc_out,
+                    unit_state, build_cache, cache_len):
+    checks: List[Check] = []
+    aux = jnp.zeros((), jnp.float32)
+    new_states = {}
+    for i, bt in enumerate(pattern):
+        st = unit_state[f"b{i}"] if unit_state is not None else None
+        x, cs, a, ns = layer_apply_seq(
+            unit_p[f"b{i}"], x, bt, cfg, abft, positions, enc_out, st,
+            build_cache, cache_len)
+        checks += cs
+        aux += a
+        if build_cache:
+            new_states[f"b{i}"] = ns
+    x = constrain_batch(x)
+    return x, checks, aux, (new_states if build_cache else None)
+
+
+def apply_segments(params_segs, cfg: ModelConfig, x: Array, abft: ABFTConfig,
+                   positions: Array, enc_out: Optional[Array],
+                   states: Optional[List[Params]], build_cache: bool,
+                   cache_len: int, segs: List[Tuple[Tuple[str, ...], int]]
+                   ) -> Tuple[Array, List[Check], Array, Optional[List[Params]]]:
+    all_checks: List[Check] = []
+    aux_total = jnp.zeros((), jnp.float32)
+    new_states: List[Params] = []
+    for si, ((pattern, count), seg_p) in enumerate(zip(segs, params_segs)):
+        seg_state = states[si] if states is not None else None
+
+        def unit_fn(x, unit_p, unit_state):
+            return _apply_unit_seq(unit_p, x, pattern, cfg, abft, positions,
+                                   enc_out, unit_state, build_cache, cache_len)
+
+        if cfg.remat:
+            unit_fn = jax.checkpoint(unit_fn)
+
+        if count == 1 or not cfg.scan_layers:
+            xs_state = None
+            outs = []
+            for ui in range(count):
+                up = jax.tree.map(lambda a: a[ui], seg_p)
+                us = jax.tree.map(lambda a: a[ui], seg_state) \
+                    if seg_state is not None else None
+                x, cs, aux, ns = unit_fn(x, up, us)
+                all_checks += cs
+                aux_total += aux
+                outs.append(ns)
+            if build_cache:
+                new_states.append(jax.tree.map(
+                    lambda *a: jnp.stack(a), *outs) if len(outs) > 1 else
+                    jax.tree.map(lambda a: a[None], outs[0]))
+        else:
+            def scan_body(x, inp):
+                unit_p, unit_state = inp
+                x, cs, aux, ns = unit_fn(x, unit_p, unit_state)
+                return x, (cs, aux, ns)
+
+            if seg_state is None:
+                # dummy per-unit states so scan xs line up
+                proto = _apply_unit_seq  # noqa: F841
+                dummy = [None] * count
+                x, (cs, aux, ns) = _scan_with_optional_state(
+                    scan_body, x, seg_p, None, count)
+            else:
+                x, (cs, aux, ns) = _scan_with_optional_state(
+                    scan_body, x, seg_p, seg_state, count)
+            all_checks += [cs]           # stacked Check pytree ([count]-leaves)
+            aux_total += aux.sum()
+            if build_cache:
+                new_states.append(ns)
+    return x, all_checks, aux_total, (new_states if build_cache else None)
+
+
+def _scan_with_optional_state(body, x, seg_p, seg_state, count):
+    if seg_state is None:
+        def body2(x, unit_p):
+            return body(x, (unit_p, None))
+        return jax.lax.scan(body2, x, seg_p)
+    return jax.lax.scan(body, x, (seg_p, seg_state))
+
+
+# ---------------------------------------------------------------------------
+# model-level entry points
+# ---------------------------------------------------------------------------
+
+def _flatten_checks(checks) -> List[Check]:
+    flat: List[Check] = []
+    for c in checks:
+        if isinstance(c, Check):
+            flat.append(c)
+        elif isinstance(c, list):
+            flat += _flatten_checks(c)
+    return flat
+
+
+def encode(params: Params, cfg: ModelConfig, src_embeds: Array,
+           abft: ABFTConfig) -> Tuple[Array, List[Check]]:
+    ecfg = encoder_cfg(cfg)
+    b, s, _ = src_embeds.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = src_embeds.astype(cdtype(cfg)) + sinusoid_positions(
+        positions, cfg.d_model, cdtype(cfg))
+    segs = seg_structure(ecfg)
+    x, checks, _, _ = apply_segments(
+        params["encoder"]["segments"], ecfg, x, abft, positions, None, None,
+        False, 0, segs)
+    x = norm_apply(x, params["encoder"]["final_norm"], cfg)
+    return x, checks
+
+
+def model_forward(params: Params, cfg: ModelConfig, batch: Dict[str, Array],
+                  abft: ABFTConfig) -> Tuple[Array, ABFTReport, Array]:
+    """Training/eval forward.  batch keys:
+      'tokens' [B,T]; optional 'prefix_embeds' [B,P,d] (VLM/audio stub);
+      encdec: 'src_embeds' [B,S,d] + 'tokens' (decoder input)."""
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    x = constrain_batch(embed(params["embed"], tokens, cfg))
+    offset = 0
+    if "prefix_embeds" in batch and cfg.family != "encdec":
+        pre = batch["prefix_embeds"].astype(x.dtype)
+        x = jnp.concatenate([pre, x], axis=1)
+        offset = pre.shape[1]
+    tt = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(tt)[None], (b, tt))
+
+    enc_out = None
+    checks: List[Check] = []
+    if cfg.family == "encdec":
+        enc_out, ec = encode(params, cfg, batch["src_embeds"], abft)
+        checks += ec
+        x = x + sinusoid_positions(positions, cfg.d_model, x.dtype)
+
+    segs = seg_structure(cfg)
+    x, cs, aux, _ = apply_segments(
+        params["segments"], cfg, x, abft, positions, enc_out, None, False, 0,
+        segs)
+    checks += cs
+    x = constrain_batch(norm_apply(x, params["final_norm"], cfg))
+    if offset:
+        x = x[:, offset:]
+    logits, lc = _lm_head(params, cfg, x, abft)
+    checks += lc
+    report = summarize(_flatten_checks(checks), abft)
+    return logits, report, aux
+
+
+def _lm_head(params, cfg, x, abft):
+    from repro.core.abft import check_matmul
+    checks: List[Check] = []
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"].astype(x.dtype)
+        logits = jnp.einsum("btd,vd->btv", x, w)
+        if abft.enabled:
+            checks.append(check_matmul(
+                x.reshape(-1, x.shape[-1]), w.T,
+                logits.reshape(-1, logits.shape[-1]), abft))
+    else:
+        logits, checks = dense(params["head"], x, abft)
+    logits = logits.astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        # mask pad classes (elementwise on the sharded tensor — no reshard)
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return logits, checks
+
+
+def lm_loss(logits: Array, labels: Array, mask: Optional[Array] = None
+    ) -> Array:
+    """Scatter-free CE: take_along_axis backward scatters into [B,T,V]
+    (62.5 GiB/device all-gather on gemma train_4k — §Perf hillclimb 1);
+    the one-hot einsum form keeps fwd+bwd elementwise over the sharded
+    vocab axis."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = (labels[..., None] ==
+              jnp.arange(logits.shape[-1])).astype(logits.dtype)
+    picked = jnp.sum(logits * onehot, axis=-1)
+    nll = lse - picked
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+# ---------------------------------------------------------------------------
+# prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int
+                      ) -> List[Params]:
+    """Zeroed per-segment stacked decode states (also used as ShapeDtype
+    specs by the dry-run)."""
+    dtype = cdtype(cfg)
+    cross = cfg.family == "encdec"
+    states = []
+    for pattern, count in seg_structure(cfg):
+        unit = {f"b{i}": layer_state_init(cfg, bt, batch, cache_len, dtype,
+                                          cross)
+                for i, bt in enumerate(pattern)}
+        states.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (count, *a.shape)), unit))
+    return states
+
+
+def model_prefill(params: Params, cfg: ModelConfig, batch: Dict[str, Array],
+                  abft: ABFTConfig, cache_len: int
+                  ) -> Tuple[Array, List[Params], ABFTReport]:
+    """Run the prompt, build decode state.  Returns (last-token logits,
+    states, report)."""
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    x = embed(params["embed"], tokens, cfg)
+    if "prefix_embeds" in batch and cfg.family != "encdec":
+        x = jnp.concatenate([batch["prefix_embeds"].astype(x.dtype), x], axis=1)
+    tt = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(tt)[None], (b, tt))
+    enc_out = None
+    checks: List[Check] = []
+    if cfg.family == "encdec":
+        enc_out, ec = encode(params, cfg, batch["src_embeds"], abft)
+        checks += ec
+        x = x + sinusoid_positions(positions, cfg.d_model, x.dtype)
+    segs = seg_structure(cfg)
+    x, cs, _, states = apply_segments(
+        params["segments"], cfg, x, abft, positions, enc_out, None, True,
+        cache_len, segs)
+    checks += cs
+    x = norm_apply(x, params["final_norm"], cfg)
+    logits, lc = _lm_head(params, cfg, x[:, -1:], abft)
+    checks += lc
+    return logits, states, summarize(_flatten_checks(checks), abft)
+
+
+def model_decode(params: Params, cfg: ModelConfig, states: List[Params],
+                 tokens: Array, pos: Array, abft: ABFTConfig
+                 ) -> Tuple[Array, List[Params], ABFTReport]:
+    """One decode step.  tokens: [B,1]; pos: scalar int32 position."""
+    b = tokens.shape[0]
+    x = embed(params["embed"], tokens, cfg)
+    if cfg.family == "encdec":
+        positions = jnp.full((b, 1), pos, jnp.int32)
+        x = x + sinusoid_positions(positions, cfg.d_model, x.dtype)
+    checks: List[Check] = []
+    new_states: List[Params] = []
+    segs = seg_structure(cfg)
+    for (pattern, count), seg_p, seg_st in zip(segs, params["segments"], states):
+
+        def unit_fn(x, unit_p, unit_state):
+            cs_all: List[Check] = []
+            ns = {}
+            for i, bt in enumerate(pattern):
+                x, cs, s2 = layer_apply_decode(
+                    unit_p[f"b{i}"], x, bt, cfg, abft, pos, unit_state[f"b{i}"])
+                cs_all += cs
+                ns[f"b{i}"] = s2
+            return constrain_batch(x), cs_all, ns
+
+        if count == 1 or not cfg.scan_layers:
+            outs = []
+            for ui in range(count):
+                up = jax.tree.map(lambda a: a[ui], seg_p)
+                us = jax.tree.map(lambda a: a[ui], seg_st)
+                x, cs, ns = unit_fn(x, up, us)
+                checks += cs
+                outs.append(ns)
+            new_states.append(
+                jax.tree.map(lambda *a: jnp.stack(a), *outs) if len(outs) > 1
+                else jax.tree.map(lambda a: a[None], outs[0]))
+        else:
+            def body(x, inp):
+                up, us = inp
+                x, cs, ns = unit_fn(x, up, us)
+                return x, (cs, ns)
+            x, (cs, ns) = jax.lax.scan(body, x, (seg_p, seg_st))
+            checks += [cs]
+            new_states.append(ns)
+
+    x = norm_apply(x, params["final_norm"], cfg)
+    logits, lc = _lm_head(params, cfg, x, abft)
+    checks += lc
+    return logits, new_states, summarize(_flatten_checks(checks), abft)

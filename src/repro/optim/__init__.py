@@ -1,0 +1,8 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from .schedule import cosine_warmup  # noqa: F401
+from .clip import clip_by_global_norm, global_norm  # noqa: F401
+from .compression import (  # noqa: F401
+    compress_int8,
+    decompress_int8,
+    ef_compress_grads,
+)

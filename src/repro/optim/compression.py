@@ -1,0 +1,47 @@
+"""int8 gradient compression with error feedback for DP all-reduce.
+
+At 1000+ nodes the data-parallel gradient all-reduce is the dominant
+cross-pod collective.  Quantizing to int8 with per-tensor scale cuts those
+bytes 4× (bf16) / 2× (already-bf16 comms); the quantization residual is fed
+back into the next step's gradient (error feedback), which keeps convergence
+(Karimireddy et al., 2019).
+
+Usage inside a pjit'd step: quantize -> psum int32 -> dequantize, or (GSPMD
+path) simply quantize/dequantize around the autodiff gradient — XLA then
+all-reduces the int8 tensor.  The error-feedback buffer lives in the
+optimizer state and shares the parameter sharding.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_grads(grads, ef_state):
+    """Error-feedback int8 round-trip: returns (compressed-then-restored
+    grads, new error buffers).  ef_state is a pytree like grads (f32)."""
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = compress_int8(gf)
+        deq = decompress_int8(q, s)
+        return deq.astype(g.dtype), gf - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(ef_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))

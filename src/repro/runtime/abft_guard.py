@@ -1,0 +1,74 @@
+"""ABFT guard: closes the loop from error *detection* to *recovery*.
+
+The paper detects faults; a 1000-node deployment must also act on them.
+Policy (per train/serve step):
+
+  1. run the step; the ABFTReport flag is a replicated scalar in the step
+     outputs (one host read, no extra collective beyond the checksum psum);
+  2. flag set  -> retry the step from the same inputs (bounded retries) —
+     transient SDC almost never repeats on identical data;
+  3. still flagged -> restore from the last checkpoint and replay — this is
+     the persistent-fault path (bad chip), where the scheduler should also
+     evict the offending host;
+  4. track flag-rate statistics: a chip flagging above `evict_rate` is
+     reported via `should_evict` for the cluster layer to act on.
+
+Because the checked step is pure (params, batch) -> outputs, the retry is
+exact replay; no optimizer state was committed for a flagged step (the guard
+runs *before* state adoption).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Any, Callable, Optional, Tuple
+
+log = logging.getLogger(__name__)
+
+
+@dataclasses.dataclass
+class GuardConfig:
+    max_retries: int = 2
+    evict_rate: float = 1e-3     # flags per step above which chip is suspect
+    window: int = 1000
+
+
+class ABFTGuard:
+    def __init__(self, cfg: GuardConfig = GuardConfig(),
+                 restore_fn: Optional[Callable[[], Any]] = None):
+        self.cfg = cfg
+        self.restore_fn = restore_fn
+        self.steps = 0
+        self.flags = 0
+        self.retries = 0
+        self.restores = 0
+
+    def run_step(self, step_fn: Callable[..., Tuple[Any, Any]], *args):
+        """step_fn returns (new_state, metrics) where metrics['abft_flag'] is
+        the replicated detection scalar.  Returns the adopted (state, metrics).
+        """
+        self.steps += 1
+        for attempt in range(self.cfg.max_retries + 1):
+            out, metrics = step_fn(*args)
+            flagged = bool(metrics["abft_flag"])
+            if not flagged:
+                if attempt:
+                    log.warning("ABFT: retry %d succeeded", attempt)
+                return out, metrics
+            self.flags += 1
+            self.retries += int(attempt < self.cfg.max_retries)
+            log.error("ABFT flag on step %d (attempt %d): max_rel=%.3e",
+                      self.steps, attempt, float(metrics.get("abft_max_rel", -1)))
+        # persistent failure: roll back
+        self.restores += 1
+        if self.restore_fn is not None:
+            log.error("ABFT: persistent fault; restoring from checkpoint")
+            return self.restore_fn(), metrics
+        raise RuntimeError("ABFT: persistent fault and no restore_fn given")
+
+    @property
+    def flag_rate(self) -> float:
+        return self.flags / max(self.steps, 1)
+
+    def should_evict(self) -> bool:
+        return self.steps >= 100 and self.flag_rate > self.cfg.evict_rate

@@ -1,0 +1,51 @@
+"""Straggler watchdog: EWMA step-time tracking with slow-host detection.
+
+In a synchronous data-parallel job every step runs at the pace of the
+slowest participant.  The watchdog keeps an exponentially-weighted moving
+average and flags steps exceeding `threshold`× the EWMA — the hook the
+cluster layer uses to (a) log the event, (b) trigger the elastic path
+(checkpoint + reshard without the slow host) when flags persist.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    threshold: float = 2.0
+    alpha: float = 0.05
+    warmup: int = 10
+
+    ewma: float = 0.0
+    n: int = 0
+    slow_streak: int = 0
+    events: int = 0
+    _t0: Optional[float] = None
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> bool:
+        """Returns True when this step was a straggler event."""
+        dt = time.perf_counter() - self._t0
+        self.n += 1
+        if self.n <= self.warmup:
+            self.ewma = dt if self.ewma == 0 else \
+                0.5 * (self.ewma + dt)
+            return False
+        slow = dt > self.threshold * self.ewma
+        # slow steps do not pollute the EWMA
+        if not slow:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+            self.slow_streak = 0
+        else:
+            self.events += 1
+            self.slow_streak += 1
+        return slow
+
+    def should_reshard(self, streak: int = 5) -> bool:
+        """Persistent slowness -> advise elastic reconfiguration."""
+        return self.slow_streak >= streak

