@@ -20,8 +20,19 @@ from typing import Dict
 
 from repro.configs.base import ModelConfig, ShapeConfig
 
+from repro.launch.costs import xla_cost_analysis
+
 BF16 = 2
 F32 = 4
+
+
+def xla_flops(compiled) -> float:
+    """Compiled-graph FLOPs (remember: scan bodies are counted ONCE).
+
+    Raises KeyError if the properties lack 'flops' — a silent sentinel
+    would turn the scan-undercount probe into a vacuous pass.
+    """
+    return float(xla_cost_analysis(compiled)["flops"])
 
 
 @dataclasses.dataclass

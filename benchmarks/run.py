@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV at the end.  Individual benches:
   python -m benchmarks.fig3_runtime_split      (paper Fig. 3)
   python -m benchmarks.abft_overhead           (Table II transposed to LMs)
   python -m benchmarks.roofline                (reads results/dryrun JSONs)
+  python -m benchmarks.sparse_vs_dense         (sparse aggregation path)
 """
 from __future__ import annotations
 
@@ -16,10 +17,10 @@ from typing import List
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
-                    help="comma list: table2,table1,fig3,abft,roofline")
+                    help="comma list: table2,table1,fig3,abft,roofline,sparse")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only != "all" else {
-        "table2", "table1", "fig3", "abft", "roofline"}
+        "table2", "table1", "fig3", "abft", "roofline", "sparse"}
 
     csv: List[str] = []
     if "table2" in want:
@@ -37,6 +38,9 @@ def main() -> None:
     if "roofline" in want:
         from benchmarks import roofline
         roofline.run(csv)
+    if "sparse" in want:
+        from benchmarks import sparse_vs_dense
+        sparse_vs_dense.run(csv)
 
     print("\nname,us_per_call,derived")
     for line in csv:

@@ -17,8 +17,13 @@ from .abft import (  # noqa: F401
     checked_matmul,
     gcn_layer,
     gcn_layer_fused,
+    gcn_layer_fused_sparse,
+    gcn_layer_sparse,
     gcn_layer_split,
+    gcn_layer_split_sparse,
     merge_reports,
+    sparse_col_checksum,
+    sparse_matmul,
     summarize,
 )
 from .checksum import (  # noqa: F401

@@ -128,16 +128,7 @@ def check_chain(mats: Sequence[Array], out: Array, cfg: ABFTConfig) -> Check:
 def gcn_layer_split(s: Array, h: Array, w: Array, cfg: ABFTConfig
                     ) -> tuple[Array, tuple[Check, Check]]:
     """Baseline ABFT (eqs. 2–3): combination-first, two separate checks."""
-    x = h @ w
-    chk1 = check_matmul(h, w, x, cfg)
-    h_out = s @ x
-    # x_r must come from the *independent* path H w_r (eq. 2 upper-right),
-    # NOT from row-sums of the computed X: a fault in X would otherwise show
-    # up identically in predicted and actual and cancel.
-    s_c = col_checksum(s, cfg.dtype)
-    x_r = h.astype(cfg.dtype) @ row_checksum(w, cfg.dtype)
-    chk2 = Check(predicted=s_c @ x_r, actual=_total(h_out, cfg))
-    return h_out, (chk1, chk2)
+    return gcn_layer_split_sparse(s, h, w, cfg)
 
 
 def gcn_layer_fused(s: Array, h: Array, w: Array, cfg: ABFTConfig
@@ -148,24 +139,92 @@ def gcn_layer_fused(s: Array, h: Array, w: Array, cfg: ABFTConfig
     deployment), the extra column x_r = H w_r during the first multiply, and
     s_c = e^T S (offline for static graphs).
     """
-    w_r = row_checksum(w, cfg.dtype)          # offline in deployment
-    x = h @ w
-    x_r = h.astype(cfg.dtype) @ w_r           # eq. (5) extra column
-    h_out = s @ x
-    s_c = col_checksum(s, cfg.dtype)          # offline for static graphs
-    pred = s_c @ x_r                          # eq. (6) corner = s_c H w_r
-    return h_out, Check(predicted=pred, actual=_total(h_out, cfg))
+    return gcn_layer_fused_sparse(s, h, w, cfg)
 
 
 def gcn_layer(s: Array, h: Array, w: Array, cfg: ABFTConfig
               ) -> tuple[Array, list[Check]]:
     """Policy dispatch used by the GCN model."""
+    return gcn_layer_sparse(s, h, w, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Canonical layer implementations, generic over the adjacency (BCOO or
+# dense S — the dense gcn_layer* wrappers above delegate here).  Only the
+# aggregation matmul and the s_c checksum honour sparsity.  For a static
+# graph s_c = e^T S never changes — compute it once offline
+# (:func:`sparse_col_checksum`) and pass it to every layer/step.
+# ---------------------------------------------------------------------------
+
+def _is_bcoo(s: Any) -> bool:
+    from jax.experimental import sparse as jsparse
+    return isinstance(s, jsparse.BCOO)
+
+
+def sparse_matmul(s: Any, x: Array) -> Array:
+    """S @ X for BCOO or dense S (BCOO lowers to scatter-add dot_general)."""
+    return (s @ x) if _is_bcoo(s) else jnp.matmul(s, x)
+
+
+def sparse_col_checksum(s: Any, dtype: Any = jnp.float32) -> Array:
+    """e^T S without densifying: O(nnz) segment-sum over column indices.
+
+    This is the offline s_c precompute for static graphs — call it once per
+    graph and thread the result through :func:`gcn_layer_fused_sparse`.
+    """
+    if not _is_bcoo(s):
+        return col_checksum(s, dtype)
+    data = s.data.astype(dtype)
+    cols = s.indices[..., 1]
+    return jax.ops.segment_sum(data, cols, num_segments=s.shape[1])
+
+
+def gcn_layer_fused_sparse(s: Any, h: Array, w: Array, cfg: ABFTConfig,
+                           s_c: Optional[Array] = None
+                           ) -> tuple[Array, Check]:
+    """GCN-ABFT (eqs. 4–6) with a sparse (BCOO) aggregation operand.
+
+    Identical check algebra to :func:`gcn_layer_fused`; ``s_c`` should be
+    the offline precompute for static graphs (recomputed O(nnz) when not
+    supplied, which is still cheap but wasteful across layers/steps).
+    """
+    w_r = row_checksum(w, cfg.dtype)          # offline in deployment
+    x = h @ w
+    x_r = h.astype(cfg.dtype) @ w_r           # eq. (5) extra column
+    h_out = sparse_matmul(s, x)
+    if s_c is None:
+        s_c = sparse_col_checksum(s, cfg.dtype)
+    pred = s_c @ x_r                          # eq. (6) corner = s_c H w_r
+    return h_out, Check(predicted=pred, actual=_total(h_out, cfg))
+
+
+def gcn_layer_split_sparse(s: Any, h: Array, w: Array, cfg: ABFTConfig,
+                           s_c: Optional[Array] = None
+                           ) -> tuple[Array, tuple[Check, Check]]:
+    """Baseline split ABFT (eqs. 2–3) over a sparse aggregation operand."""
+    x = h @ w
+    chk1 = check_matmul(h, w, x, cfg)
+    h_out = sparse_matmul(s, x)
+    if s_c is None:
+        s_c = sparse_col_checksum(s, cfg.dtype)
+    # x_r must come from the *independent* path H w_r (eq. 2 upper-right),
+    # NOT from row-sums of the computed X: a fault in X would otherwise show
+    # up identically in predicted and actual and cancel.
+    x_r = h.astype(cfg.dtype) @ row_checksum(w, cfg.dtype)
+    chk2 = Check(predicted=s_c @ x_r, actual=_total(h_out, cfg))
+    return h_out, (chk1, chk2)
+
+
+def gcn_layer_sparse(s: Any, h: Array, w: Array, cfg: ABFTConfig,
+                     s_c: Optional[Array] = None
+                     ) -> tuple[Array, list[Check]]:
+    """Policy dispatch used by the sparse GCN model path."""
     if cfg.mode == "none":
-        return s @ (h @ w), []
+        return sparse_matmul(s, h @ w), []
     if cfg.mode == "split":
-        h_out, (c1, c2) = gcn_layer_split(s, h, w, cfg)
+        h_out, (c1, c2) = gcn_layer_split_sparse(s, h, w, cfg, s_c)
         return h_out, [c1, c2]
-    h_out, c = gcn_layer_fused(s, h, w, cfg)
+    h_out, c = gcn_layer_fused_sparse(s, h, w, cfg, s_c)
     return h_out, [c]
 
 

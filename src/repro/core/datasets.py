@@ -118,6 +118,21 @@ class Coo:
         np.add.at(out, (self.row, self.col), self.data)
         return out
 
+    def to_bcoo(self):
+        """jax.experimental.sparse.BCOO view (device side; duplicates kept —
+        BCOO matmul accumulates them, matching todense + np.add.at)."""
+        import jax.numpy as jnp
+        from jax.experimental import sparse as jsparse
+        idx = np.stack([self.row, self.col], axis=1).astype(np.int32)
+        return jsparse.BCOO((jnp.asarray(self.data), jnp.asarray(idx)),
+                            shape=self.shape)
+
+    def to_block_ell(self, block_m: int = 128, block_k: int = 128):
+        """Padded block-ELL layout for the spmm_abft Pallas kernel."""
+        from repro.kernels.spmm_abft.layout import coo_to_block_ell
+        return coo_to_block_ell(self.row, self.col, self.data, self.shape,
+                                block_m, block_k)
+
 
 @dataclasses.dataclass
 class GraphDataset:

@@ -13,7 +13,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .abft import ABFTConfig, ABFTReport, Check, gcn_layer, summarize
+from .abft import (
+    ABFTConfig,
+    ABFTReport,
+    Check,
+    gcn_layer_sparse,
+    sparse_col_checksum,
+    summarize,
+)
 
 Array = jax.Array
 Params = Dict[str, Any]
@@ -32,15 +39,12 @@ def init_gcn(rng: jax.Array, dims: Sequence[int]) -> Params:
 
 def gcn_forward(params: Params, s: Array, h0: Array, cfg: ABFTConfig
                 ) -> Tuple[Array, List[Check]]:
-    """Forward pass; checks are taken pre-activation (as in the paper)."""
-    h = h0
-    checks: List[Check] = []
-    n_layers = len(params["layers"])
-    for i, layer in enumerate(params["layers"]):
-        h_out, cs = gcn_layer(s, h, layer["w"], cfg)
-        checks.extend(cs)
-        h = jax.nn.relu(h_out) if i < n_layers - 1 else h_out
-    return h, checks
+    """Forward pass; checks are taken pre-activation (as in the paper).
+
+    Delegates to the adjacency-generic loop (dense S dispatches through
+    the same layer math; s_c is then computed once and shared by layers).
+    """
+    return gcn_forward_sparse(params, s, h0, cfg)
 
 
 def gcn_apply(params: Params, s: Array, h0: Array, cfg: ABFTConfig
@@ -61,6 +65,74 @@ def gcn_loss(params: Params, s: Array, h0: Array, labels: Array,
     else:
         loss = nll.mean()
     return loss, report
+
+
+# ---------------------------------------------------------------------------
+# Sparse-adjacency path.  S stays a BCOO; the per-graph s_c = e^T S is
+# computed once offline (:func:`precompute_s_c`) and reused across every
+# layer and step — the paper's "offline for static graphs" convention.
+# ---------------------------------------------------------------------------
+
+def precompute_s_c(s, cfg: ABFTConfig) -> Array:
+    """Offline e^T S in the checksum accumulation dtype."""
+    return sparse_col_checksum(s, cfg.dtype)
+
+
+def gcn_forward_sparse(params: Params, s, h0: Array, cfg: ABFTConfig,
+                       s_c: Optional[Array] = None
+                       ) -> Tuple[Array, List[Check]]:
+    """Canonical forward loop, generic over the adjacency (BCOO or dense);
+    checks are taken pre-activation."""
+    if s_c is None and cfg.enabled:
+        s_c = precompute_s_c(s, cfg)
+    h = h0
+    checks: List[Check] = []
+    n_layers = len(params["layers"])
+    for i, layer in enumerate(params["layers"]):
+        h_out, cs = gcn_layer_sparse(s, h, layer["w"], cfg, s_c)
+        checks.extend(cs)
+        h = jax.nn.relu(h_out) if i < n_layers - 1 else h_out
+    return h, checks
+
+
+def gcn_apply_sparse(params: Params, s, h0: Array, cfg: ABFTConfig,
+                     s_c: Optional[Array] = None
+                     ) -> Tuple[Array, ABFTReport]:
+    """Sparse twin of :func:`gcn_apply`: same logits, same report semantics.
+
+    ``s`` is a ``jax.experimental.sparse.BCOO`` normalized adjacency (dense
+    also accepted — the layer math dispatches).  BCOO is a pytree, so this
+    jits with ``s`` as a regular argument.
+    """
+    logits, checks = gcn_forward_sparse(params, s, h0, cfg, s_c)
+    return logits, summarize(checks, cfg)
+
+
+def normalized_adjacency_bcoo(edges: np.ndarray, n: int):
+    """D^-1/2 (A + I) D^-1/2 as a BCOO sparse matrix (any graph size)."""
+    from jax.experimental import sparse as jsparse
+    src = np.concatenate([edges[:, 0], edges[:, 1], np.arange(n)])
+    dst = np.concatenate([edges[:, 1], edges[:, 0], np.arange(n)])
+    # dedupe (symmetrization may duplicate bidirectional input edges)
+    key = src * n + dst
+    _, keep = np.unique(key, return_index=True)
+    src, dst = src[keep], dst[keep]
+    deg = np.bincount(src, minlength=n).astype(np.float64)
+    dinv = 1.0 / np.sqrt(np.maximum(deg, 1.0))
+    vals = (dinv[src] * dinv[dst]).astype(np.float32)
+    idx = np.stack([src, dst], axis=1).astype(np.int32)
+    return jsparse.BCOO((jnp.asarray(vals), jnp.asarray(idx)),
+                        shape=(n, n))
+
+
+def dataset_to_sparse(ds) -> Tuple[Any, Array, np.ndarray]:
+    """(S as BCOO, dense H0, labels) views of a core.datasets.GraphDataset.
+
+    H0 stays dense on device: after the first combination every activation
+    is dense anyway, and the paper's sparse-H0 op accounting lives in the
+    analytic model (core/opcount.py), not the JAX path.
+    """
+    return ds.s.to_bcoo(), jnp.asarray(ds.features.todense()), ds.labels
 
 
 def normalized_adjacency_dense(edges: np.ndarray, n: int) -> np.ndarray:

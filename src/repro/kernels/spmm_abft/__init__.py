@@ -1,0 +1,6 @@
+from .layout import BlockEll, coo_to_block_ell, dense_to_block_ell  # noqa: F401
+from .ops import (  # noqa: F401
+    gcn_layer_fused_sparse_kernel,
+    spmm_abft,
+    spmm_abft_auto,
+)

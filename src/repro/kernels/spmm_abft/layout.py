@@ -1,0 +1,148 @@
+"""Padded block-ELL layout for the sparse aggregation step H_out = S X.
+
+The normalized adjacency S of a static graph is converted ONCE, offline, to
+a blocked ELL layout: rows are partitioned into ``block_m``-row stripes and
+columns into ``block_k`` stripes; each row-stripe stores its nonzero
+(block_m, block_k) tiles densely, padded to the widest stripe (``width`` =
+max nonzero tiles per stripe).  Padding tiles point at column-block 0 with
+all-zero values, so they contribute nothing and need no masking in the
+kernel — the same trick matmul_abft uses for shape padding.
+
+Why ELL and not CSR-of-blocks: the Pallas grid must be static, and a
+rectangular [n_block_rows, width] tile table gives every grid step the same
+block shape; the column-block indices ride along as a scalar-prefetch
+operand (``pltpu.PrefetchScalarGridSpec``) so the X tile DMA can be issued
+before the kernel body runs.
+
+The conversion is numpy-only (no jax import at module load) so the fault
+engine and dataset code can use it without touching the accelerator path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class BlockEll:
+    """Padded block-ELL sparse matrix (host-side numpy buffers).
+
+    values:     [n_block_rows, width, block_m, block_k] f32 tile table
+    block_cols: [n_block_rows, width] int32 column-block index per tile
+                (padding tiles: index 0, values 0)
+    shape:      logical (unpadded) matrix shape
+    """
+
+    values: np.ndarray
+    block_cols: np.ndarray
+    shape: Tuple[int, int]
+
+    @property
+    def block_m(self) -> int:
+        return self.values.shape[2]
+
+    @property
+    def block_k(self) -> int:
+        return self.values.shape[3]
+
+    @property
+    def n_block_rows(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.values.shape[1]
+
+    @property
+    def padded_rows(self) -> int:
+        return self.n_block_rows * self.block_m
+
+    @property
+    def padded_cols(self) -> int:
+        # column-block indices address X row-stripes; X must be padded to
+        # cover the largest referenced stripe
+        return (int(self.block_cols.max()) + 1) * self.block_k \
+            if self.block_cols.size else self.block_k
+
+    @property
+    def nnz_tiles(self) -> int:
+        """Nonzero tiles actually stored (excludes ELL padding)."""
+        return int((np.abs(self.values).sum(axis=(2, 3)) > 0).sum())
+
+    @property
+    def fill(self) -> float:
+        """Stored-tile fraction of the full dense block grid."""
+        n_bk = -(-self.shape[1] // self.block_k)
+        return self.width / max(n_bk, 1)
+
+    def todense(self) -> np.ndarray:
+        """Dense [rows, cols] reconstruction (tests / small graphs only)."""
+        m, k = self.shape
+        nbk = -(-k // self.block_k)
+        out = np.zeros((self.padded_rows, nbk * self.block_k), np.float32)
+        for i in range(self.n_block_rows):
+            for t in range(self.width):
+                j = int(self.block_cols[i, t])
+                out[i * self.block_m:(i + 1) * self.block_m,
+                    j * self.block_k:(j + 1) * self.block_k] += \
+                    self.values[i, t]
+        return out[:m, :k]
+
+    def col_sums(self, dtype=np.float64) -> np.ndarray:
+        """e^T S over the logical columns — the offline s_c vector."""
+        nbk = -(-self.shape[1] // self.block_k)
+        out = np.zeros(nbk * self.block_k, dtype)
+        # tile-local column sums scattered to their column-block slot
+        local = self.values.astype(dtype).sum(axis=2)     # [nbr, width, bk]
+        for i in range(self.n_block_rows):
+            for t in range(self.width):
+                j = int(self.block_cols[i, t])
+                out[j * self.block_k:(j + 1) * self.block_k] += local[i, t]
+        return out[:self.shape[1]]
+
+
+def coo_to_block_ell(row: np.ndarray, col: np.ndarray, data: np.ndarray,
+                     shape: Tuple[int, int], block_m: int = 128,
+                     block_k: int = 128) -> BlockEll:
+    """Convert COO triplets to padded block-ELL (duplicates are summed)."""
+    m, k = shape
+    row = np.asarray(row, np.int64)
+    col = np.asarray(col, np.int64)
+    data = np.asarray(data, np.float32)
+    nbm = -(-m // block_m)
+    nbk = -(-k // block_k)
+
+    br = row // block_m
+    bc = col // block_k
+    tile_id = br * nbk + bc
+    order = np.argsort(tile_id, kind="stable")
+    tile_sorted = tile_id[order]
+    uniq, starts = np.unique(tile_sorted, return_index=True)
+    ends = np.append(starts[1:], tile_sorted.size)
+
+    counts = np.zeros(nbm, np.int64)
+    np.add.at(counts, uniq // nbk, 1)
+    width = max(int(counts.max()) if counts.size else 1, 1)
+
+    values = np.zeros((nbm, width, block_m, block_k), np.float32)
+    block_cols = np.zeros((nbm, width), np.int32)
+    slot = np.zeros(nbm, np.int64)
+    for t, lo, hi in zip(uniq, starts, ends):
+        i, j = int(t // nbk), int(t % nbk)
+        s = int(slot[i])
+        idx = order[lo:hi]
+        np.add.at(values[i, s],
+                  (row[idx] - i * block_m, col[idx] - j * block_k), data[idx])
+        block_cols[i, s] = j
+        slot[i] += 1
+    return BlockEll(values=values, block_cols=block_cols, shape=(m, k))
+
+
+def dense_to_block_ell(a: np.ndarray, block_m: int = 128,
+                       block_k: int = 128) -> BlockEll:
+    """Dense → block-ELL, dropping all-zero tiles (tests / small graphs)."""
+    a = np.asarray(a, np.float32)
+    r, c = np.nonzero(a)
+    return coo_to_block_ell(r, c, a[r, c], a.shape, block_m, block_k)

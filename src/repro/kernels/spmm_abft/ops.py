@@ -1,0 +1,92 @@
+"""Public wrappers for the spmm_abft Pallas kernel: host layout → device
+arrays, padding to block/lane multiples, final stripe-sum reduction, Check
+construction, and the fused sparse GCN layer built on top of it.
+
+CPU has no Pallas TPU backend: pass ``interpret=True`` (tests do) or call
+through :func:`spmm_abft_auto`, which falls back to interpret mode off-TPU.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.abft import Check
+
+from .kernel import spmm_abft_kernel
+from .layout import BlockEll
+
+
+def device_block_ell(bell: BlockEll) -> Tuple[jax.Array, jax.Array]:
+    """(block_cols, values) as device arrays — stage once per static graph."""
+    return jnp.asarray(bell.block_cols), jnp.asarray(bell.values)
+
+
+def _fit_rows(x: jax.Array, rows: int) -> jax.Array:
+    """Pad or trim x's leading axis to ``rows``.  Trimming is sound: it
+    only happens when trailing column-blocks of S hold no nonzero tiles,
+    so those x rows are never referenced by any stored tile."""
+    if x.shape[0] > rows:
+        return x[:rows]
+    if x.shape[0] < rows:
+        return jnp.pad(x, [(0, rows - x.shape[0])] + [(0, 0)] * (x.ndim - 1))
+    return x
+
+
+def spmm_abft(bell: BlockEll, x: jax.Array, xr: Optional[jax.Array] = None,
+              *, block_g: int = 128, interpret: bool = False
+              ) -> Tuple[jax.Array, Check]:
+    """out = S @ X with the fused ABFT check computed in the same pass.
+
+    ``xr`` is the carried right-checksum column: X·e by default (standalone
+    check of this multiply), or H·w_r threaded from the combination matmul
+    for the full GCN-ABFT chain (eq. 4) — then Check.predicted equals
+    s_c H w_r without s_c ever being applied online.
+    Returns (out [n, g], Check(predicted=Σ S·xr, actual=Σ out)).
+    """
+    n, k_logical = bell.shape
+    g = x.shape[1]
+    if xr is None:
+        xr = x.astype(jnp.float32).sum(axis=1, keepdims=True)
+    cols, vals = device_block_ell(bell)
+    k_pad = max(bell.padded_cols, bell.block_k)
+    gp = -(-g // block_g) * block_g
+    xp = _fit_rows(x, k_pad)
+    if gp != g:
+        xp = jnp.pad(xp, [(0, 0), (0, gp - g)])
+    xrp = _fit_rows(xr.astype(jnp.float32), k_pad)
+    out, stripe_sums, extra = spmm_abft_kernel(cols, vals, xp, xrp,
+                                               interpret=interpret)
+    out = out[:n, :g]
+    return out, Check(predicted=extra[:n, 0].sum(),
+                      actual=stripe_sums.sum())
+
+
+def spmm_abft_auto(bell: BlockEll, x: jax.Array,
+                   xr: Optional[jax.Array] = None, *, block_g: int = 128
+                   ) -> Tuple[jax.Array, Check]:
+    """Same as :func:`spmm_abft`, interpret-mode off-TPU (CPU fallback)."""
+    on_tpu = jax.default_backend() == "tpu"
+    return spmm_abft(bell, x, xr, block_g=block_g, interpret=not on_tpu)
+
+
+def gcn_layer_fused_sparse_kernel(bell: BlockEll, h: jax.Array, w: jax.Array,
+                                  *, w_r: Optional[jax.Array] = None,
+                                  block_g: int = 128,
+                                  interpret: bool = False
+                                  ) -> Tuple[jax.Array, Check]:
+    """One GCN layer H_out = S (H W) with the single fused GCN-ABFT check
+    (eqs. 4–6), aggregation through the block-ELL Pallas kernel.
+
+    The combination X = H W stays an XLA matmul (dense, MXU-friendly); the
+    eq.-5 column x_r = H w_r is the only extra work there, and it rides
+    through the sparse kernel as the carried checksum column, so
+    Check.predicted = Σ S H w_r = s_c H w_r with no online s_c pass.
+    ``w_r`` (= W·e) is offline in a deployment — fold it at weight-load time.
+    """
+    if w_r is None:
+        w_r = w.astype(jnp.float32).sum(axis=1, keepdims=True)
+    x = h @ w
+    x_r = h.astype(jnp.float32) @ w_r
+    return spmm_abft(bell, x, x_r, block_g=block_g, interpret=interpret)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the spmm_abft kernel (densifies S — small shapes)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmm_abft_ref(s_dense: jax.Array, x: jax.Array, xr: jax.Array):
+    """Returns (out, actual_checksum_scalar, extra [M,1]) in f32 accumulation.
+
+    s_dense is the dense reconstruction of the block-ELL operand
+    (``BlockEll.todense()``); xr is the carried right-checksum column.
+    """
+    out = jnp.dot(s_dense, x, preferred_element_type=jnp.float32)
+    actual = out.sum()
+    extra = jnp.dot(s_dense, xr, preferred_element_type=jnp.float32)
+    return out.astype(x.dtype), actual, extra.astype(jnp.float32)

@@ -1,0 +1,22 @@
+"""XLA compiled-cost helpers shared by dryrun and the benchmarks."""
+from __future__ import annotations
+
+from typing import Dict
+
+
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """Normalized compiled.cost_analysis() across jaxlib versions.
+
+    jaxlib ≤0.4.32 returns one properties dict; newer jaxlibs return a
+    list of dicts (per computation).  Walk whichever shape we get and
+    merge to a flat {metric: value} dict so callers can index
+    ``["flops"]`` unconditionally.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, dict):
+        return dict(ca)
+    merged: Dict[str, float] = {}
+    for props in ca:
+        for key, val in props.items():
+            merged[key] = merged.get(key, 0.0) + float(val)
+    return merged

@@ -199,7 +199,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            from repro.launch.costs import xla_cost_analysis
+            cost = xla_cost_analysis(compiled)
             coll = collective_bytes(compiled.as_text())
         rec.update(
             status="ok",

@@ -11,6 +11,12 @@ from repro.kernels.matmul_abft.ops import matmul_abft
 from repro.kernels.matmul_abft.ref import matmul_abft_ref
 from repro.kernels.flash_checksum.ops import flash_attention_checksum
 from repro.kernels.flash_checksum.ref import flash_checksum_ref
+from repro.kernels.spmm_abft.layout import coo_to_block_ell, dense_to_block_ell
+from repro.kernels.spmm_abft.ops import (
+    gcn_layer_fused_sparse_kernel,
+    spmm_abft,
+)
+from repro.kernels.spmm_abft.ref import spmm_abft_ref
 
 CFG = ABFTConfig(mode="fused", threshold=1e-2, relative=True)
 
@@ -114,3 +120,93 @@ def test_flash_checksum_equals_chain_identity():
     out = o.reshape(b, t, h * dh) @ wo
     np.testing.assert_allclose(float(ex.sum()), float(out.sum()),
                                rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# spmm_abft (block-ELL sparse aggregation)
+# ---------------------------------------------------------------------------
+
+def sparse_rnd(key, m, k, density, scale=0.2):
+    rng = np.random.default_rng(key)
+    dense = np.where(rng.random((m, k)) < density,
+                     rng.normal(0, scale, size=(m, k)), 0.0)
+    return dense.astype(np.float32)
+
+
+@pytest.mark.parametrize("m,k,g,bm,bk,density", [
+    (128, 128, 128, 32, 32, 0.10),
+    (256, 256, 64, 64, 64, 0.05),
+    (100, 100, 20, 32, 32, 0.08),     # ragged rows/cols/features (padding)
+    (200, 130, 7, 64, 32, 0.15),      # rectangular + ragged everything
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_spmm_abft_matches_ref(m, k, g, bm, bk, density, dtype):
+    dense = sparse_rnd(m * 3 + k, m, k, density)
+    bell = coo_to_block_ell(*np.nonzero(dense), dense[np.nonzero(dense)],
+                            (m, k), block_m=bm, block_k=bk)
+    np.testing.assert_allclose(bell.todense(), dense)
+    x = rnd(g * 11 + 5, (k, g), dtype)
+    xr = x.astype(jnp.float32).sum(axis=1, keepdims=True)
+
+    out, chk = spmm_abft(bell, x, interpret=True, block_g=bm)
+    out_ref, actual_ref, extra_ref = spmm_abft_ref(jnp.asarray(dense), x, xr)
+
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(out_ref, np.float32),
+                               rtol=tol, atol=tol * 8)
+    scale = max(1.0, abs(float(actual_ref)))
+    assert abs(float(chk.actual) - float(actual_ref)) < tol * scale
+    assert abs(float(chk.predicted) - float(extra_ref.sum())) < tol * scale
+    # checksum consistency on clean data
+    rel = abs(float(chk.predicted) - float(chk.actual)) / scale
+    assert rel < (5e-2 if dtype == jnp.bfloat16 else 1e-4), rel
+    assert not bool(chk.flag(ABFTConfig(mode="fused", threshold=0.2,
+                                        relative=True)))
+
+
+def test_spmm_abft_detects_corruption():
+    dense = sparse_rnd(42, 128, 128, 0.1)
+    bell = dense_to_block_ell(dense, block_m=32, block_k=32)
+    x = rnd(6, (128, 16), jnp.float32)
+    out, chk = spmm_abft(bell, x, interpret=True, block_g=32)
+    bad = out.at[17, 3].add(100.0)
+    diff = abs(float(chk.predicted) - float(bad.sum()))
+    assert diff > 50.0
+
+
+def test_spmm_abft_carried_column_chain():
+    """Threading x_r = H w_r through the kernel yields the eq.-4 chain
+    prediction s_c H w_r — the full fused GCN-ABFT layer check."""
+    n, f, g = 160, 24, 16
+    dense = sparse_rnd(7, n, n, 0.07)
+    bell = dense_to_block_ell(dense, block_m=32, block_k=32)
+    h = rnd(8, (n, f), jnp.float32) * 0.3
+    w = rnd(9, (f, g), jnp.float32)
+
+    h_out, chk = gcn_layer_fused_sparse_kernel(bell, h, w, interpret=True,
+                                               block_g=32)
+    ref = dense @ np.asarray(h @ w)
+    np.testing.assert_allclose(np.asarray(h_out), ref, rtol=1e-5, atol=1e-5)
+    s_c = dense.astype(np.float64).sum(axis=0)
+    w_r = np.asarray(w, np.float64).sum(axis=1)
+    pred_ref = float(s_c @ (np.asarray(h, np.float64) @ w_r))
+    scale = max(1.0, abs(pred_ref))
+    assert abs(float(chk.predicted) - pred_ref) / scale < 1e-5
+    assert abs(float(chk.actual) - ref.sum()) / scale < 1e-4
+
+
+def test_spmm_abft_empty_trailing_column_block():
+    """All nonzeros in the leading columns: padded_cols < K, so ops must
+    TRIM x instead of padding it (regression: negative jnp.pad widths)."""
+    dense = np.zeros((64, 64), np.float32)
+    dense[:, :30] = sparse_rnd(11, 64, 30, 0.3)
+    bell = dense_to_block_ell(dense, block_m=32, block_k=32)
+    assert bell.padded_cols < 64
+    x = rnd(12, (64, 8), jnp.float32)
+    out, chk = spmm_abft(bell, x, interpret=True, block_g=32)
+    np.testing.assert_allclose(np.asarray(out), dense @ np.asarray(x),
+                               rtol=1e-5, atol=1e-5)
+    rel = abs(float(chk.predicted) - float(chk.actual)) / \
+        max(1.0, abs(float(chk.actual)))
+    assert rel < 1e-4
