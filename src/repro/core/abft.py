@@ -179,6 +179,25 @@ def sparse_col_checksum(s: Any, dtype: Any = jnp.float32) -> Array:
     return jax.ops.segment_sum(data, cols, num_segments=s.shape[1])
 
 
+def _engine_layer(s: Any, h: Array, w: Array, cfg: ABFTConfig,
+                  s_c: Optional[Array], mode: str
+                  ) -> tuple[Array, list[Check]]:
+    """Delegate one layer to the unified engine under a forced mode.
+
+    The eq. 4–6 algebra formerly written out here lives in
+    ``repro/engine/api.py`` now; these entry points stay for callers that
+    address a single layer directly.  Imports are deferred: the engine
+    imports this module for Check/summarize.
+    """
+    from repro.engine import gcn_layer as engine_gcn_layer
+    from repro.engine import make_backend
+
+    if cfg.mode != mode:
+        cfg = dataclasses.replace(cfg, mode=mode)
+    bk = make_backend(s, cfg, s_c=s_c if cfg.enabled else None)
+    return engine_gcn_layer(bk, h, w, cfg)
+
+
 def gcn_layer_fused_sparse(s: Any, h: Array, w: Array, cfg: ABFTConfig,
                            s_c: Optional[Array] = None
                            ) -> tuple[Array, Check]:
@@ -188,44 +207,23 @@ def gcn_layer_fused_sparse(s: Any, h: Array, w: Array, cfg: ABFTConfig,
     the offline precompute for static graphs (recomputed O(nnz) when not
     supplied, which is still cheap but wasteful across layers/steps).
     """
-    w_r = row_checksum(w, cfg.dtype)          # offline in deployment
-    x = h @ w
-    x_r = h.astype(cfg.dtype) @ w_r           # eq. (5) extra column
-    h_out = sparse_matmul(s, x)
-    if s_c is None:
-        s_c = sparse_col_checksum(s, cfg.dtype)
-    pred = s_c @ x_r                          # eq. (6) corner = s_c H w_r
-    return h_out, Check(predicted=pred, actual=_total(h_out, cfg))
+    h_out, checks = _engine_layer(s, h, w, cfg, s_c, "fused")
+    return h_out, checks[0]
 
 
 def gcn_layer_split_sparse(s: Any, h: Array, w: Array, cfg: ABFTConfig,
                            s_c: Optional[Array] = None
                            ) -> tuple[Array, tuple[Check, Check]]:
     """Baseline split ABFT (eqs. 2–3) over a sparse aggregation operand."""
-    x = h @ w
-    chk1 = check_matmul(h, w, x, cfg)
-    h_out = sparse_matmul(s, x)
-    if s_c is None:
-        s_c = sparse_col_checksum(s, cfg.dtype)
-    # x_r must come from the *independent* path H w_r (eq. 2 upper-right),
-    # NOT from row-sums of the computed X: a fault in X would otherwise show
-    # up identically in predicted and actual and cancel.
-    x_r = h.astype(cfg.dtype) @ row_checksum(w, cfg.dtype)
-    chk2 = Check(predicted=s_c @ x_r, actual=_total(h_out, cfg))
-    return h_out, (chk1, chk2)
+    h_out, checks = _engine_layer(s, h, w, cfg, s_c, "split")
+    return h_out, (checks[0], checks[1])
 
 
 def gcn_layer_sparse(s: Any, h: Array, w: Array, cfg: ABFTConfig,
                      s_c: Optional[Array] = None
                      ) -> tuple[Array, list[Check]]:
     """Policy dispatch used by the sparse GCN model path."""
-    if cfg.mode == "none":
-        return sparse_matmul(s, h @ w), []
-    if cfg.mode == "split":
-        h_out, (c1, c2) = gcn_layer_split_sparse(s, h, w, cfg, s_c)
-        return h_out, [c1, c2]
-    h_out, c = gcn_layer_fused_sparse(s, h, w, cfg, s_c)
-    return h_out, [c]
+    return _engine_layer(s, h, w, cfg, s_c, cfg.mode)
 
 
 # ---------------------------------------------------------------------------

@@ -17,7 +17,6 @@ from .abft import (
     ABFTConfig,
     ABFTReport,
     Check,
-    gcn_layer_sparse,
     sparse_col_checksum,
     summarize,
 )
@@ -81,18 +80,14 @@ def precompute_s_c(s, cfg: ABFTConfig) -> Array:
 def gcn_forward_sparse(params: Params, s, h0: Array, cfg: ABFTConfig,
                        s_c: Optional[Array] = None
                        ) -> Tuple[Array, List[Check]]:
-    """Canonical forward loop, generic over the adjacency (BCOO or dense);
-    checks are taken pre-activation."""
-    if s_c is None and cfg.enabled:
-        s_c = precompute_s_c(s, cfg)
-    h = h0
-    checks: List[Check] = []
-    n_layers = len(params["layers"])
-    for i, layer in enumerate(params["layers"]):
-        h_out, cs = gcn_layer_sparse(s, h, layer["w"], cfg, s_c)
-        checks.extend(cs)
-        h = jax.nn.relu(h_out) if i < n_layers - 1 else h_out
-    return h, checks
+    """Forward loop, generic over the adjacency (BCOO or dense).
+
+    Thin shim over the unified engine (``repro.engine``), which owns the
+    canonical loop (ReLU chain-breaking, pre-activation checks) and the
+    backend dispatch; kept as the historical core entry point.
+    """
+    from repro.engine import Graph, gcn_forward as engine_forward
+    return engine_forward(params, Graph(s=s, h0=h0, s_c=s_c), cfg)
 
 
 def gcn_apply_sparse(params: Params, s, h0: Array, cfg: ABFTConfig,

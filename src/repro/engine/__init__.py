@@ -1,0 +1,25 @@
+"""Unified GCN engine: backend-dispatched layers, sharding, batching.
+
+Public surface:
+  api       — Graph, gcn_layer, gcn_forward, gcn_apply (the entry point)
+  backends  — AggregationBackend protocol + dense/bcoo/block_ell registry
+  sharded   — Partition + shard_map'd stripe-sharded block-ELL aggregation
+  batching  — bucketed padding of variable-size graphs for batched serving
+"""
+from .api import Graph, gcn_apply, gcn_forward, gcn_layer  # noqa: F401
+from .backends import (  # noqa: F401
+    AggregationBackend,
+    backend_names,
+    get_backend,
+    infer_backend,
+    make_backend,
+    register_backend,
+)
+from .batching import (  # noqa: F401
+    GraphBatch,
+    make_batches,
+    pad_graph,
+    pick_bucket,
+    synth_graph_stream,
+)
+from .sharded import Partition, sharded_spmm_abft  # noqa: F401

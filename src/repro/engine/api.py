@@ -1,0 +1,123 @@
+"""Unified GCN engine: one entry point, three aggregation backends.
+
+This module is the ONE place where the paper's check algebra lives:
+
+  * eq. (5): the extra column x_r = H w_r formed during the combination;
+  * eq. (4)/(6): the fused corner comparison s_c H w_r vs e^T H_out e,
+    produced by the backend's ``aggregate(x, x_r)``;
+  * split baseline (eqs. 2–3): the per-matmul check of X = H W plus the
+    same aggregation corner;
+  * ReLU chain-breaking: checks are taken pre-activation; every layer is
+    one linear chain, activations end it (paper §III);
+  * report reduction: ``summarize`` / ``merge_reports`` from core.abft.
+
+``core/abft.py`` / ``core/gcn.py`` / ``kernels/spmm_abft/ops.py`` keep
+their historical entry points as thin shims over this engine.
+
+    logits, report = gcn_apply(params, Graph(s, h0), cfg,
+                               backend="block_ell",
+                               partition=Partition(mesh, "graph"))
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.abft import (
+    ABFTConfig,
+    ABFTReport,
+    Check,
+    check_matmul,
+    summarize,
+)
+from repro.core.checksum import row_checksum
+
+from .backends import AggregationBackend, make_backend
+
+Array = jax.Array
+Params = Any
+
+
+@dataclasses.dataclass
+class Graph:
+    """One graph as the engine consumes it.
+
+    ``s`` is the normalized adjacency in any backend format (dense array,
+    BCOO, or host-side BlockEll); ``h0`` the dense node features; ``s_c``
+    the optional offline column checksum e^T S (precompute once per static
+    graph — recomputed O(nnz) when absent).  Dense ``s``/``h0`` may carry
+    leading batch axes (batched multi-graph serving).
+    """
+
+    s: Any
+    h0: Array
+    s_c: Optional[Array] = None
+
+    @property
+    def n(self) -> int:
+        return int(self.h0.shape[-2])
+
+
+def gcn_layer(bk: AggregationBackend, h: Array, w: Array, cfg: ABFTConfig,
+              *, w_r: Optional[Array] = None
+              ) -> Tuple[Array, List[Check]]:
+    """One pre-activation GCN layer H_out = S (H W) under ABFT policy.
+
+    The canonical eq. 4–6 algebra: ``w_r = W e`` (offline in deployment —
+    pass it in to fold at weight-load time), the eq.-5 column
+    ``x_r = H w_r`` taken from the *independent* path (never from row-sums
+    of the computed X: a fault in X would cancel), and the backend's fused
+    corner check.  ``fused`` emits that single check; ``split`` adds the
+    combination-matmul check (eq. 2–3 baseline); ``none`` emits nothing.
+    """
+    x = h @ w
+    if not cfg.enabled:
+        h_out, _ = bk.aggregate(x, None)
+        return h_out, []
+    if w_r is None:
+        w_r = row_checksum(w, cfg.dtype)
+    x_r = h.astype(cfg.dtype) @ w_r
+    h_out, chk = bk.aggregate(x, x_r)
+    if cfg.mode == "split":
+        return h_out, [check_matmul(h, w, x, cfg), chk]
+    return h_out, [chk]
+
+
+def gcn_forward(params: Params, graph: Graph, cfg: ABFTConfig, *,
+                backend: Optional[str] = None, partition=None,
+                **backend_opts) -> Tuple[Array, List[Check]]:
+    """Forward pass through all layers; returns (logits, per-layer checks).
+
+    The backend is constructed once per call (s_c staged/computed once,
+    shared by every layer); ReLU between layers breaks the checksum chain,
+    so each layer carries its own check — the paper's per-layer fused
+    granularity.
+    """
+    bk = make_backend(graph.s, cfg, backend=backend, s_c=graph.s_c,
+                      partition=partition, **backend_opts)
+    h = graph.h0
+    checks: List[Check] = []
+    layers = params["layers"]
+    for i, layer in enumerate(layers):
+        h_out, cs = gcn_layer(bk, h, layer["w"], cfg)
+        checks.extend(cs)
+        h = jax.nn.relu(h_out) if i < len(layers) - 1 else h_out
+    return h, checks
+
+
+def gcn_apply(params: Params, graph: Graph, cfg: ABFTConfig, *,
+              backend: Optional[str] = None, partition=None,
+              **backend_opts) -> Tuple[Array, ABFTReport]:
+    """The engine entry point: logits + one replicated ABFTReport.
+
+    ``backend`` is ``"dense" | "bcoo" | "block_ell"`` (inferred from the
+    adjacency operand when omitted); ``partition`` a
+    :class:`~repro.engine.sharded.Partition` for stripe-sharded block-ELL
+    aggregation (per-shard partial checks psum into this same report).
+    """
+    logits, checks = gcn_forward(params, graph, cfg, backend=backend,
+                                 partition=partition, **backend_opts)
+    return logits, summarize(checks, cfg)

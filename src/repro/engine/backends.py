@@ -1,0 +1,197 @@
+"""Aggregation backends for the unified GCN engine.
+
+A backend owns exactly one thing: the aggregation matmul H_out = S @ X and
+the eq.-6 corner of the fused check for that multiply.  Everything else —
+the eq.-5 extra column x_r = H w_r, split-vs-fused policy, ReLU
+chain-breaking, report reduction — lives once in ``engine/api.py``.
+
+The protocol is deliberately narrow::
+
+    aggregate(x, x_r) -> (h_out, Check | None)
+
+``x`` is the combination output X = H W; ``x_r`` is the carried checksum
+column H w_r (a [..., n]-vector, or ``None`` when checking is disabled).
+When ``x_r`` is given, the returned :class:`~repro.core.abft.Check` holds
+``predicted = s_c @ x_r`` (equivalently ``Σ S x_r`` — the kernel backend
+never materializes s_c online) and ``actual = Σ H_out``.
+
+Three built-in backends, selected by name or inferred from the operand:
+
+  * ``dense``     — jnp matmul over a dense S; batched leading axes ok.
+  * ``bcoo``      — ``jax.experimental.sparse`` BCOO aggregation with the
+                    O(nnz) offline s_c (``sparse_col_checksum``).
+  * ``block_ell`` — the Pallas spmm_abft kernel over a padded block-ELL
+                    layout; the check rides the kernel's fused epilogue,
+                    and a :class:`~repro.engine.sharded.Partition` shards
+                    row-stripes across a mesh axis with psum'd partials.
+
+New backends register with :func:`register_backend`; the registry is the
+single dispatch point for ``gcn_apply(..., backend=...)``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.abft import ABFTConfig, Check, _total
+from repro.core.checksum import col_checksum
+
+Array = jax.Array
+
+_REGISTRY: Dict[str, Callable[..., "AggregationBackend"]] = {}
+
+
+def register_backend(name: str):
+    """Class decorator: make ``name`` resolvable by :func:`get_backend`."""
+    def deco(cls):
+        _REGISTRY[name] = cls
+        cls.name = name
+        return cls
+    return deco
+
+
+def get_backend(name: str) -> Callable[..., "AggregationBackend"]:
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown engine backend {name!r}; "
+                         f"registered: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def backend_names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def infer_backend(s: Any) -> str:
+    """Map an adjacency operand to its natural backend name."""
+    from repro.kernels.spmm_abft.layout import BlockEll
+    from jax.experimental import sparse as jsparse
+    if isinstance(s, BlockEll):
+        return "block_ell"
+    if isinstance(s, jsparse.BCOO):
+        return "bcoo"
+    return "dense"
+
+
+class AggregationBackend:
+    """Protocol base; subclasses implement :meth:`aggregate`.
+
+    Constructors take only the options they honour — an unknown or
+    inapplicable keyword (``block_g`` on dense, a typo'd ``interpet``)
+    raises TypeError instead of being silently dropped.
+    """
+
+    name = "abstract"
+
+    def __init__(self, s: Any, cfg: ABFTConfig, *, s_c: Optional[Array] = None,
+                 partition=None):
+        raise NotImplementedError
+
+    def aggregate(self, x: Array, x_r: Optional[Array]
+                  ) -> Tuple[Array, Optional[Check]]:
+        raise NotImplementedError
+
+
+@register_backend("dense")
+class DenseBackend(AggregationBackend):
+    """S as a dense jnp array.  Leading batch axes broadcast: S [..., n, n]
+    with X [..., n, g] yields batched scalar checks, which ``summarize``
+    reduces — this is what batched multi-graph serving runs on."""
+
+    def __init__(self, s: Array, cfg: ABFTConfig, *,
+                 s_c: Optional[Array] = None, partition=None):
+        if partition is not None:
+            raise ValueError("dense backend does not support partition=; "
+                             "use backend='block_ell'")
+        self.s = jnp.asarray(s)
+        self.cfg = cfg
+        self.s_c = s_c if s_c is not None else (
+            col_checksum(self.s, cfg.dtype) if cfg.enabled else None)
+
+    def aggregate(self, x, x_r):
+        h_out = jnp.matmul(self.s, x)
+        if x_r is None:
+            return h_out, None
+        pred = jnp.einsum("...k,...k->...", self.s_c, x_r)
+        return h_out, Check(predicted=pred, actual=_total(h_out, self.cfg))
+
+
+@register_backend("bcoo")
+class BcooBackend(AggregationBackend):
+    """S as a jax.experimental.sparse BCOO; s_c is the O(nnz) offline
+    segment-sum (``sparse_col_checksum``) shared across layers/steps."""
+
+    def __init__(self, s: Any, cfg: ABFTConfig, *,
+                 s_c: Optional[Array] = None, partition=None):
+        if partition is not None:
+            raise ValueError("bcoo backend does not support partition=; "
+                             "use backend='block_ell'")
+        from repro.core.abft import sparse_col_checksum
+        self.s = s
+        self.cfg = cfg
+        self.s_c = s_c if s_c is not None else (
+            sparse_col_checksum(s, cfg.dtype) if cfg.enabled else None)
+
+    def aggregate(self, x, x_r):
+        h_out = self.s @ x
+        if x_r is None:
+            return h_out, None
+        pred = jnp.einsum("...k,...k->...", self.s_c, x_r)
+        return h_out, Check(predicted=pred, actual=_total(h_out, self.cfg))
+
+
+@register_backend("block_ell")
+class BlockEllBackend(AggregationBackend):
+    """S as a host-side padded block-ELL (``kernels/spmm_abft/layout.py``);
+    aggregation runs through the Pallas spmm_abft kernel, whose fused
+    epilogue carries the eq.-5 column so predicted = Σ S x_r = s_c H w_r
+    without an online s_c pass.
+
+    With ``partition=Partition(mesh, axis)`` the row-stripes shard across
+    the mesh axis via shard_map; each shard contributes a partial
+    (predicted, actual) pair that psums into the replicated global check —
+    exactly the single-device eq.-6 scalar, because the checksum is linear.
+    """
+
+    def __init__(self, s: Any, cfg: ABFTConfig, *,
+                 s_c: Optional[Array] = None, partition=None,
+                 block_g: int = 128, interpret: Optional[bool] = None):
+        from repro.kernels.spmm_abft.layout import BlockEll, pad_block_rows
+        if not isinstance(s, BlockEll):
+            raise TypeError("block_ell backend needs a BlockEll operand; "
+                            "convert with dense_to_block_ell/coo_to_block_ell")
+        self.cfg = cfg
+        self.block_g = block_g
+        self.partition = partition
+        self.interpret = (jax.default_backend() != "tpu"
+                          if interpret is None else interpret)
+        if partition is not None:
+            s = pad_block_rows(s, partition.n_shards)
+        self.bell = s
+        from repro.kernels.spmm_abft.ops import device_block_ell
+        self.cols, self.vals = device_block_ell(s)
+
+    def aggregate(self, x, x_r):
+        if x.ndim != 2:
+            raise ValueError("block_ell backend is single-graph ([n, g]); "
+                             "batch via engine.batching or the dense backend")
+        from repro.kernels.spmm_abft.ops import spmm_abft
+        xr_col = None if x_r is None else x_r.astype(jnp.float32)[:, None]
+        if self.partition is None:
+            out, chk = spmm_abft(self.bell, x, xr_col, block_g=self.block_g,
+                                 interpret=self.interpret,
+                                 _staged=(self.cols, self.vals))
+            return out, (chk if x_r is not None else None)
+        from .sharded import sharded_spmm_abft
+        return sharded_spmm_abft(
+            self.bell, self.cols, self.vals, x, xr_col, self.partition,
+            block_g=self.block_g, interpret=self.interpret)
+
+
+def make_backend(s: Any, cfg: ABFTConfig, *, backend: Optional[str] = None,
+                 s_c: Optional[Array] = None, partition=None,
+                 **opts) -> AggregationBackend:
+    """Resolve + construct the aggregation backend for operand ``s``."""
+    name = backend or infer_backend(s)
+    return get_backend(name)(s, cfg, s_c=s_c, partition=partition, **opts)

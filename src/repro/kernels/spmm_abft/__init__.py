@@ -1,4 +1,9 @@
-from .layout import BlockEll, coo_to_block_ell, dense_to_block_ell  # noqa: F401
+from .layout import (  # noqa: F401
+    BlockEll,
+    coo_to_block_ell,
+    dense_to_block_ell,
+    pad_block_rows,
+)
 from .ops import (  # noqa: F401
     gcn_layer_fused_sparse_kernel,
     spmm_abft,

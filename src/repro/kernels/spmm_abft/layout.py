@@ -103,6 +103,23 @@ class BlockEll:
         return out[:self.shape[1]]
 
 
+def pad_block_rows(bell: BlockEll, multiple: int) -> BlockEll:
+    """Pad the stripe count to a multiple (sharded aggregation: stripes must
+    divide the mesh axis).  Padding stripes are all-zero tiles aliasing
+    column-block 0 — they produce zero output rows and contribute nothing
+    to either side of the check, so no masking anywhere downstream."""
+    nbm = bell.n_block_rows
+    add = (-nbm) % multiple
+    if add == 0:
+        return bell
+    values = np.concatenate(
+        [bell.values,
+         np.zeros((add,) + bell.values.shape[1:], np.float32)], axis=0)
+    block_cols = np.concatenate(
+        [bell.block_cols, np.zeros((add, bell.width), np.int32)], axis=0)
+    return BlockEll(values=values, block_cols=block_cols, shape=bell.shape)
+
+
 def coo_to_block_ell(row: np.ndarray, col: np.ndarray, data: np.ndarray,
                      shape: Tuple[int, int], block_m: int = 128,
                      block_k: int = 128) -> BlockEll:

@@ -34,8 +34,31 @@ def _fit_rows(x: jax.Array, rows: int) -> jax.Array:
     return x
 
 
+def prepare_operands(bell: BlockEll, x: jax.Array, xr: Optional[jax.Array],
+                     block_g: int) -> Tuple[jax.Array, jax.Array]:
+    """The kernel's operand contract, shared by the single-device and the
+    shard_map'd caller: rows padded to cover every referenced column
+    stripe (>= one block_k), the feature axis to a block_g lane multiple,
+    and ``xr`` defaulting to the standalone column X·e in f32."""
+    if xr is None:
+        xr = x.astype(jnp.float32).sum(axis=1, keepdims=True)
+    k_pad = max(bell.padded_cols, bell.block_k)
+    g = x.shape[1]
+    gp = -(-g // block_g) * block_g
+    xp = _fit_rows(x, k_pad)
+    if gp != g:
+        xp = jnp.pad(xp, [(0, 0), (0, gp - g)])
+    return xp, _fit_rows(xr.astype(jnp.float32), k_pad)
+
+
+def trim_output(bell: BlockEll, out: jax.Array, g: int) -> jax.Array:
+    """Drop stripe/lane padding back to the logical [n, g] output."""
+    return out[:bell.shape[0], :g]
+
+
 def spmm_abft(bell: BlockEll, x: jax.Array, xr: Optional[jax.Array] = None,
-              *, block_g: int = 128, interpret: bool = False
+              *, block_g: int = 128, interpret: bool = False,
+              _staged: Optional[Tuple[jax.Array, jax.Array]] = None
               ) -> Tuple[jax.Array, Check]:
     """out = S @ X with the fused ABFT check computed in the same pass.
 
@@ -43,24 +66,18 @@ def spmm_abft(bell: BlockEll, x: jax.Array, xr: Optional[jax.Array] = None,
     check of this multiply), or H·w_r threaded from the combination matmul
     for the full GCN-ABFT chain (eq. 4) — then Check.predicted equals
     s_c H w_r without s_c ever being applied online.
+    ``_staged`` lets a long-lived caller (the engine's block_ell backend)
+    reuse already-staged (block_cols, values) device arrays.
     Returns (out [n, g], Check(predicted=Σ S·xr, actual=Σ out)).
     """
-    n, k_logical = bell.shape
+    n, _k_logical = bell.shape
     g = x.shape[1]
-    if xr is None:
-        xr = x.astype(jnp.float32).sum(axis=1, keepdims=True)
-    cols, vals = device_block_ell(bell)
-    k_pad = max(bell.padded_cols, bell.block_k)
-    gp = -(-g // block_g) * block_g
-    xp = _fit_rows(x, k_pad)
-    if gp != g:
-        xp = jnp.pad(xp, [(0, 0), (0, gp - g)])
-    xrp = _fit_rows(xr.astype(jnp.float32), k_pad)
+    cols, vals = _staged if _staged is not None else device_block_ell(bell)
+    xp, xrp = prepare_operands(bell, x, xr, block_g)
     out, stripe_sums, extra = spmm_abft_kernel(cols, vals, xp, xrp,
                                                interpret=interpret)
-    out = out[:n, :g]
-    return out, Check(predicted=extra[:n, 0].sum(),
-                      actual=stripe_sums.sum())
+    return trim_output(bell, out, g), Check(predicted=extra[:n, 0].sum(),
+                                            actual=stripe_sums.sum())
 
 
 def spmm_abft_auto(bell: BlockEll, x: jax.Array,
@@ -79,14 +96,18 @@ def gcn_layer_fused_sparse_kernel(bell: BlockEll, h: jax.Array, w: jax.Array,
     """One GCN layer H_out = S (H W) with the single fused GCN-ABFT check
     (eqs. 4–6), aggregation through the block-ELL Pallas kernel.
 
-    The combination X = H W stays an XLA matmul (dense, MXU-friendly); the
-    eq.-5 column x_r = H w_r is the only extra work there, and it rides
-    through the sparse kernel as the carried checksum column, so
+    Thin shim over the unified engine (``repro.engine``): the eq. 4–6
+    algebra lives in ``engine/api.py``; this backend only contributes the
+    kernel aggregation, whose fused epilogue carries x_r = H w_r so
     Check.predicted = Σ S H w_r = s_c H w_r with no online s_c pass.
     ``w_r`` (= W·e) is offline in a deployment — fold it at weight-load time.
     """
-    if w_r is None:
-        w_r = w.astype(jnp.float32).sum(axis=1, keepdims=True)
-    x = h @ w
-    x_r = h.astype(jnp.float32) @ w_r
-    return spmm_abft(bell, x, x_r, block_g=block_g, interpret=interpret)
+    from repro.core.abft import ABFTConfig
+    from repro.engine import gcn_layer, make_backend
+
+    cfg = ABFTConfig(mode="fused", dtype=jnp.float32)
+    bk = make_backend(bell, cfg, backend="block_ell", block_g=block_g,
+                      interpret=interpret)
+    w_r_vec = None if w_r is None else w_r.reshape(-1)
+    h_out, checks = gcn_layer(bk, h, w, cfg, w_r=w_r_vec)
+    return h_out, checks[0]

@@ -224,6 +224,64 @@ class ShardingRules:
         return NamedSharding(self.mesh, P())
 
 
+# ---------------------------------------------------------------------------
+# Graph (GCN engine) sharding rules.  The block-ELL aggregation shards by
+# row-stripe: the tile table and its column-index table split on one mesh
+# axis, activations stay replicated (any stripe may gather any X row), and
+# the per-shard checksum partials psum into a replicated report — so the
+# only sharded tensors are the adjacency tiles and the output rows.
+# ---------------------------------------------------------------------------
+
+def make_graph_mesh(n_devices: Optional[int] = None,
+                    axis: str = "graph") -> Mesh:
+    """1-D mesh over (a prefix of) the local devices for stripe sharding."""
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else n_devices
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for a {axis}={n} mesh, have {len(devs)} — run "
+            f"under XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    return Mesh(np.asarray(devs[:n]), (axis,))
+
+
+class GraphShardingRules:
+    """PartitionSpecs for the stripe-sharded block-ELL engine backend."""
+
+    def __init__(self, mesh: Mesh, axis: str = "graph"):
+        assert axis in mesh.axis_names, (axis, mesh.axis_names)
+        self.mesh = mesh
+        self.axis = axis
+
+    @property
+    def n_shards(self) -> int:
+        return self.mesh.shape[self.axis]
+
+    def stripe_spec(self) -> P:
+        """block_cols [nbm, width] — stripes over the graph axis."""
+        return P(self.axis)
+
+    def tile_spec(self) -> P:
+        """values [nbm, width, bm, bk] — stripes over the graph axis."""
+        return P(self.axis)
+
+    def activation_spec(self) -> P:
+        """X / x_r stay replicated: column blocks gather arbitrary rows."""
+        return P()
+
+    def out_spec(self) -> P:
+        """H_out rows live where their stripes live."""
+        return P(self.axis)
+
+    def report_spec(self) -> P:
+        """Checks psum to replicated scalars."""
+        return P()
+
+    def block_ell_shardings(self) -> Tuple[NamedSharding, NamedSharding]:
+        """(cols, values) NamedShardings for device_put staging."""
+        return (NamedSharding(self.mesh, self.stripe_spec()),
+                NamedSharding(self.mesh, self.tile_spec()))
+
+
 def _p(p) -> str:
     if hasattr(p, "key"):
         return str(p.key)

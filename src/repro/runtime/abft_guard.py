@@ -19,6 +19,7 @@ runs *before* state adoption).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import logging
 from typing import Any, Callable, Optional, Tuple
@@ -30,36 +31,49 @@ log = logging.getLogger(__name__)
 class GuardConfig:
     max_retries: int = 2
     evict_rate: float = 1e-3     # flags per step above which chip is suspect
-    window: int = 1000
+    window: int = 1000           # rolling window (steps) for should_evict
+    min_samples: int = 100       # steps seen before eviction is judged
 
 
 class ABFTGuard:
-    def __init__(self, cfg: GuardConfig = GuardConfig(),
+    def __init__(self, cfg: Optional[GuardConfig] = None,
                  restore_fn: Optional[Callable[[], Any]] = None):
-        self.cfg = cfg
+        # cfg is constructed per guard — a dataclass default instance would
+        # be one shared mutable object across every guard in the process.
+        self.cfg = cfg if cfg is not None else GuardConfig()
         self.restore_fn = restore_fn
         self.steps = 0
-        self.flags = 0
+        self.flags = 0           # lifetime count of flagged steps
         self.retries = 0
         self.restores = 0
+        # per-step flagged? outcomes, newest last; drives the rolling rate —
+        # a chip that degraded an hour in must look bad *now*, not diluted
+        # by its clean history.
+        self._recent: collections.deque = collections.deque(
+            maxlen=max(self.cfg.window, 1))
 
     def run_step(self, step_fn: Callable[..., Tuple[Any, Any]], *args):
         """step_fn returns (new_state, metrics) where metrics['abft_flag'] is
         the replicated detection scalar.  Returns the adopted (state, metrics).
         """
         self.steps += 1
+        step_flagged = False
         for attempt in range(self.cfg.max_retries + 1):
             out, metrics = step_fn(*args)
             flagged = bool(metrics["abft_flag"])
             if not flagged:
                 if attempt:
                     log.warning("ABFT: retry %d succeeded", attempt)
+                self._recent.append(step_flagged)
                 return out, metrics
-            self.flags += 1
+            if not step_flagged:
+                step_flagged = True
+                self.flags += 1
             self.retries += int(attempt < self.cfg.max_retries)
             log.error("ABFT flag on step %d (attempt %d): max_rel=%.3e",
                       self.steps, attempt, float(metrics.get("abft_max_rel", -1)))
         # persistent failure: roll back
+        self._recent.append(True)
         self.restores += 1
         if self.restore_fn is not None:
             log.error("ABFT: persistent fault; restoring from checkpoint")
@@ -68,7 +82,16 @@ class ABFTGuard:
 
     @property
     def flag_rate(self) -> float:
+        """Flagged-step rate over the rolling window (recent behaviour)."""
+        if not self._recent:
+            return 0.0
+        return sum(self._recent) / len(self._recent)
+
+    @property
+    def lifetime_flag_rate(self) -> float:
         return self.flags / max(self.steps, 1)
 
     def should_evict(self) -> bool:
-        return self.steps >= 100 and self.flag_rate > self.cfg.evict_rate
+        seen = len(self._recent)
+        need = min(self.cfg.min_samples, self.cfg.window)
+        return seen >= need and self.flag_rate > self.cfg.evict_rate

@@ -1,0 +1,163 @@
+"""Sharded checksum parity (ISSUE 2): shard_map block-ELL aggregation.
+
+The stripe-sharded engine must be semantically indistinguishable from the
+single-device engine: same logits, same ABFTReport (flag / n_checks exact,
+max_rel at the rounding floor), and a bit flip landing in one shard's
+stripe must trip the *global* (psum-reduced) check.
+
+Tests run in-process when the host already exposes >= 8 devices (the CI
+multi-device job sets XLA_FLAGS=--xla_force_host_platform_device_count=8)
+and otherwise re-exec themselves in a subprocess with the flag set, so the
+default single-device tier-1 run still exercises the sharded path.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+
+NEED = 8
+
+
+def _mesh8():
+    from repro.launch.mesh import make_graph_mesh
+    return make_graph_mesh(NEED)
+
+
+def _build(seed=0, n=256, f=24):
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.gcn import init_gcn, normalized_adjacency_dense
+    from repro.kernels.spmm_abft import dense_to_block_ell
+
+    rng = np.random.default_rng(seed)
+    m = n * 2
+    e = rng.integers(0, n, size=(3 * m + 16, 2), dtype=np.int64)
+    e = e[e[:, 0] != e[:, 1]]
+    e = np.unique(np.sort(e, axis=1), axis=0)[:m]
+    s_d = normalized_adjacency_dense(e, n)
+    bell = dense_to_block_ell(s_d, block_m=32, block_k=32)
+    h0 = jnp.asarray(rng.normal(0, 0.5, size=(n, f)).astype(np.float32))
+    params = init_gcn(jax.random.PRNGKey(seed), (f, 16, 5))
+    return s_d, bell, h0, params
+
+
+def _parity_case() -> dict:
+    """Single-device vs 8-way sharded engine; returns JSONable verdicts."""
+    import numpy as np
+
+    from repro.core.abft import ABFTConfig
+    from repro.engine import Graph, Partition, gcn_apply
+
+    _, bell, h0, params = _build()
+    cfg = ABFTConfig(mode="fused", threshold=1e-3, relative=True)
+    graph = Graph(s=bell, h0=h0)
+    logits_1, rep_1 = gcn_apply(params, graph, cfg, backend="block_ell",
+                                block_g=32)
+    part = Partition(_mesh8(), "graph")
+    logits_8, rep_8 = gcn_apply(params, graph, cfg, backend="block_ell",
+                                block_g=32, partition=part)
+    return {
+        "devices": len(jax.devices()),
+        "logit_err": float(np.abs(np.asarray(logits_8)
+                                  - np.asarray(logits_1)).max()),
+        "flag_1": bool(rep_1.flag), "flag_8": bool(rep_8.flag),
+        "n_1": int(rep_1.n_checks), "n_8": int(rep_8.n_checks),
+        "max_rel_1": float(rep_1.max_rel), "max_rel_8": float(rep_8.max_rel),
+    }
+
+
+def _fault_case() -> dict:
+    """Bit flip into one shard's stripe of X -> global flag must trip."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.abft import ABFTConfig
+    from repro.core.fault import flip_bit_f32
+    from repro.engine import Partition, make_backend
+
+    _, bell, h0, params = _build(seed=1)
+    tau = 1e-4
+    cfg = ABFTConfig(mode="fused", threshold=tau, relative=False)
+    part = Partition(_mesh8(), "graph")
+    bk = make_backend(bell, cfg, partition=part, block_g=32)
+    w = params["layers"][0]["w"]
+    x = h0 @ w
+    x_r = h0 @ w.sum(axis=1)
+    _, chk_clean = bk.aggregate(x, x_r)
+    clean = abs(float(chk_clean.predicted) - float(chk_clean.actual))
+
+    # flip a high exponent bit of an X element whose row lies in shard 5's
+    # stripe range (rows 160..191 of 8x32); the self-loop in S guarantees
+    # the delta lands in shard 5's output stripe, and detection happens in
+    # the psum-reduced global check.
+    x_np = np.asarray(x).copy()
+    rows = np.arange(5 * 32, 6 * 32)
+    sub = np.argwhere(np.abs(x_np[rows]) >= 1e-2)
+    ri, j = sub[3]
+    i = int(rows[ri])
+    x_np[i, j] = flip_bit_f32(np.float32(x_np[i, j]), 27)
+    _, chk_bad = bk.aggregate(jnp.asarray(x_np), x_r)
+    div = abs(float(chk_bad.predicted) - float(chk_bad.actual))
+    return {"clean": clean, "div": div, "tau": tau}
+
+
+def _assert_parity(rec: dict):
+    assert rec["logit_err"] < 1e-5, rec
+    assert rec["flag_1"] is False and rec["flag_8"] is False, rec
+    assert rec["n_1"] == rec["n_8"] == 2, rec
+    assert rec["max_rel_1"] < 2.5e-4 and rec["max_rel_8"] < 2.5e-4, rec
+
+
+def _assert_fault(rec: dict):
+    assert rec["clean"] < rec["tau"] / 4, rec
+    assert rec["div"] > rec["tau"], rec
+
+
+# -- in-process variants (CI multi-device job; XLA_FLAGS set in the env) ----
+
+multidevice = pytest.mark.skipif(
+    len(jax.devices()) < NEED,
+    reason=f"needs {NEED} devices (XLA_FLAGS="
+           f"--xla_force_host_platform_device_count={NEED})")
+
+
+@multidevice
+def test_sharded_parity_direct():
+    _assert_parity(_parity_case())
+
+
+@multidevice
+def test_sharded_fault_detected_direct():
+    _assert_fault(_fault_case())
+
+
+# -- subprocess variants (always run, incl. single-device tier-1) -----------
+
+SUBPROC = textwrap.dedent("""
+    import os, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import test_sharded_engine as t
+    print(json.dumps({"parity": t._parity_case(), "fault": t._fault_case()}))
+""")
+
+
+def test_sharded_engine_subprocess():
+    import os
+    from pathlib import Path
+    here = Path(__file__).resolve().parent
+    env = {**os.environ,
+           "PYTHONPATH": f"src:{here}",
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "JAX_PLATFORMS": "cpu"}
+    out = subprocess.run([sys.executable, "-c", SUBPROC],
+                         capture_output=True, text=True, timeout=600,
+                         cwd=here.parent, env=env)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["parity"]["devices"] == NEED
+    _assert_parity(rec["parity"])
+    _assert_fault(rec["fault"])
