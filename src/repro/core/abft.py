@@ -250,6 +250,39 @@ def summarize(checks: Sequence[Optional[Check]], cfg: ABFTConfig) -> ABFTReport:
     )
 
 
+def per_graph_report(checks: Sequence[Optional[Check]], cfg: ABFTConfig,
+                     n: int) -> tuple[Array, Array]:
+    """Elementwise twin of :func:`summarize` for batched checks: one verdict
+    per graph instead of one reduced step flag.
+
+    Every check's fields must be [n] batched scalars (the dense batched
+    backend and the packed block-ELL segmented epilogue both emit these).
+    Returns (flags [n] bool, max_rel [n] f32) — OR / max across checks (i.e.
+    across layers), *not* across graphs, so the serving layer can retry only
+    the flagged graphs.
+    """
+    checks = [c for c in checks if c is not None]
+    if not checks or not cfg.enabled:
+        return jnp.zeros((n,), bool), jnp.zeros((n,), jnp.float32)
+    flags, rels = None, None
+    for c in checks:
+        if c.actual.shape != (n,):
+            # a scalar (or otherwise-shaped) check cannot be attributed to
+            # one graph; silently broadcasting it would mark every graph
+            # flagged and defeat the per-graph retry
+            raise ValueError(
+                f"per_graph_report needs [n={n}]-batched checks, got "
+                f"shape {c.actual.shape}; use a backend that emits "
+                f"per-graph corners (dense batched / packed block_ell)")
+        d = c.diff()
+        scale = jnp.maximum(1.0, jnp.abs(c.actual))
+        f = d > cfg.threshold * (scale if cfg.relative else 1.0)
+        r = (d / scale).astype(jnp.float32)
+        flags = f if flags is None else flags | f
+        rels = r if rels is None else jnp.maximum(rels, r)
+    return flags, rels
+
+
 def np_size(x: Array) -> int:
     try:
         return int(x.size)

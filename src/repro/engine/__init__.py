@@ -6,7 +6,13 @@ Public surface:
   sharded   — Partition + shard_map'd stripe-sharded block-ELL aggregation
   batching  — bucketed padding of variable-size graphs for batched serving
 """
-from .api import Graph, gcn_apply, gcn_forward, gcn_layer  # noqa: F401
+from .api import (  # noqa: F401
+    Graph,
+    fold_w_r,
+    gcn_apply,
+    gcn_forward,
+    gcn_layer,
+)
 from .backends import (  # noqa: F401
     AggregationBackend,
     backend_names,
@@ -17,7 +23,10 @@ from .backends import (  # noqa: F401
 )
 from .batching import (  # noqa: F401
     GraphBatch,
+    PackedGraphs,
     make_batches,
+    make_packed_batches,
+    pack_graphs,
     pad_graph,
     pick_bucket,
     synth_graph_stream,

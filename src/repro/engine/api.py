@@ -30,7 +30,6 @@ from repro.core.abft import (
     ABFTConfig,
     ABFTReport,
     Check,
-    check_matmul,
     summarize,
 )
 from repro.core.checksum import row_checksum
@@ -82,27 +81,52 @@ def gcn_layer(bk: AggregationBackend, h: Array, w: Array, cfg: ABFTConfig,
     x_r = h.astype(cfg.dtype) @ w_r
     h_out, chk = bk.aggregate(x, x_r)
     if cfg.mode == "split":
-        return h_out, [check_matmul(h, w, x, cfg), chk]
+        # the backend owns the split check's granularity: generic
+        # check_matmul scalars, or per-graph corners on the packed path
+        return h_out, [bk.combination_check(h, w, x, cfg, w_r=w_r), chk]
     return h_out, [chk]
 
 
+def fold_w_r(params: Params, cfg: ABFTConfig) -> Params:
+    """Fold the per-layer right checksum w_r = W·e into the params, once,
+    at weight-load time (the paper's "offline" eq.-5 convention).
+
+    Without the fold :func:`gcn_forward` recomputes ``row_checksum(w)``
+    every layer every step; with it, each layer carries a ``w_r`` entry in
+    ``cfg.dtype`` that the layer math consumes verbatim — bitwise-identical
+    checks, zero per-step recompute.  Re-fold after any weight update (or
+    if ``cfg.dtype`` changes).
+    """
+    if not cfg.enabled:
+        return params
+    layers = [{**layer, "w_r": row_checksum(layer["w"], cfg.dtype)}
+              for layer in params["layers"]]
+    return {**params, "layers": layers}
+
+
 def gcn_forward(params: Params, graph: Graph, cfg: ABFTConfig, *,
-                backend: Optional[str] = None, partition=None,
+                backend=None, partition=None,
                 **backend_opts) -> Tuple[Array, List[Check]]:
     """Forward pass through all layers; returns (logits, per-layer checks).
 
     The backend is constructed once per call (s_c staged/computed once,
-    shared by every layer); ReLU between layers breaks the checksum chain,
-    so each layer carries its own check — the paper's per-layer fused
-    granularity.
+    shared by every layer) — or passed in as an already-built
+    :class:`AggregationBackend` instance (the jitted packed serving step
+    builds one from traced arrays).  ReLU between layers breaks the
+    checksum chain, so each layer carries its own check — the paper's
+    per-layer fused granularity.  Layers carrying a folded ``w_r``
+    (:func:`fold_w_r`) skip the per-step row_checksum recompute.
     """
-    bk = make_backend(graph.s, cfg, backend=backend, s_c=graph.s_c,
-                      partition=partition, **backend_opts)
+    if isinstance(backend, AggregationBackend):
+        bk = backend
+    else:
+        bk = make_backend(graph.s, cfg, backend=backend, s_c=graph.s_c,
+                          partition=partition, **backend_opts)
     h = graph.h0
     checks: List[Check] = []
     layers = params["layers"]
     for i, layer in enumerate(layers):
-        h_out, cs = gcn_layer(bk, h, layer["w"], cfg)
+        h_out, cs = gcn_layer(bk, h, layer["w"], cfg, w_r=layer.get("w_r"))
         checks.extend(cs)
         h = jax.nn.relu(h_out) if i < len(layers) - 1 else h_out
     return h, checks

@@ -66,8 +66,9 @@ def backend_names() -> Tuple[str, ...]:
 def infer_backend(s: Any) -> str:
     """Map an adjacency operand to its natural backend name."""
     from repro.kernels.spmm_abft.layout import BlockEll
+    from repro.engine.batching import PackedGraphs
     from jax.experimental import sparse as jsparse
-    if isinstance(s, BlockEll):
+    if isinstance(s, (BlockEll, PackedGraphs)):
         return "block_ell"
     if isinstance(s, jsparse.BCOO):
         return "bcoo"
@@ -91,6 +92,19 @@ class AggregationBackend:
     def aggregate(self, x: Array, x_r: Optional[Array]
                   ) -> Tuple[Array, Optional[Check]]:
         raise NotImplementedError
+
+    def combination_check(self, h: Array, w: Array, x: Array,
+                          cfg: ABFTConfig, *, w_r: Optional[Array] = None
+                          ) -> Check:
+        """Split-mode (eq. 2–3) check of the combination matmul x = h w.
+
+        The default is the generic :func:`~repro.core.abft.check_matmul`;
+        backends whose check granularity is finer than "one scalar per
+        operand" (the packed block-diagonal batch) override it so the split
+        check matches their aggregate corner's per-graph shape.
+        """
+        from repro.core.abft import check_matmul
+        return check_matmul(h, w, x, cfg)
 
 
 @register_backend("dense")
@@ -152,32 +166,100 @@ class BlockEllBackend(AggregationBackend):
     the mesh axis via shard_map; each shard contributes a partial
     (predicted, actual) pair that psums into the replicated global check —
     exactly the single-device eq.-6 scalar, because the checksum is linear.
+
+    A :class:`~repro.engine.batching.PackedGraphs` operand (block-diagonal
+    packed batch) routes through the segmented epilogue instead: the
+    kernel's per-stripe checksum partials segment-sum into one eq.-6 corner
+    *per packed graph*, so the Check fields are [n_slots] batched scalars
+    and a fault in one graph flags only that graph's corner.
     """
 
     def __init__(self, s: Any, cfg: ABFTConfig, *,
                  s_c: Optional[Array] = None, partition=None,
                  block_g: int = 128, interpret: Optional[bool] = None):
         from repro.kernels.spmm_abft.layout import BlockEll, pad_block_rows
-        if not isinstance(s, BlockEll):
-            raise TypeError("block_ell backend needs a BlockEll operand; "
-                            "convert with dense_to_block_ell/coo_to_block_ell")
+        from repro.engine.batching import PackedGraphs
         self.cfg = cfg
         self.block_g = block_g
         self.partition = partition
         self.interpret = (jax.default_backend() != "tpu"
                           if interpret is None else interpret)
-        if partition is not None:
+        self.segments = None
+        self.n_slots = None
+        if isinstance(s, PackedGraphs):
+            if partition is not None:
+                raise ValueError("packed block-diagonal batches do not "
+                                 "support partition= (stripes already "
+                                 "interleave graphs)")
+            self.segments = jnp.asarray(s.stripe_graph)
+            self.n_slots = s.n_slots
+            s = s.bell
+        elif not isinstance(s, BlockEll):
+            raise TypeError("block_ell backend needs a BlockEll or "
+                            "PackedGraphs operand; convert with "
+                            "dense_to_block_ell/coo_to_block_ell or "
+                            "engine.batching.pack_graphs")
+        elif partition is not None:
             s = pad_block_rows(s, partition.n_shards)
         self.bell = s
         from repro.kernels.spmm_abft.ops import device_block_ell
         self.cols, self.vals = device_block_ell(s)
 
+    @classmethod
+    def from_staged(cls, cols: Array, vals: Array, segments: Array,
+                    n_slots: int, cfg: ABFTConfig, *, block_g: int = 128,
+                    interpret: bool = False) -> "BlockEllBackend":
+        """Packed backend over already-staged (possibly traced) arrays.
+
+        This is the jit-friendly constructor for batched serving: a jitted
+        step takes (cols, vals, segments, h0) as *arguments*, so batches of
+        the same packed shape share one compile instead of baking each
+        batch's tile table in as constants.
+        """
+        bk = cls.__new__(cls)
+        bk.cfg = cfg
+        bk.block_g = block_g
+        bk.partition = None
+        bk.interpret = interpret
+        bk.bell = None
+        bk.cols, bk.vals = cols, vals
+        bk.segments = segments
+        bk.n_slots = n_slots
+        return bk
+
+    def combination_check(self, h, w, x, cfg, *, w_r=None):
+        if self.segments is None:
+            return super().combination_check(h, w, x, cfg, w_r=w_r)
+        # per-graph eq. 2–3 corners: rows of h/x are contiguous per graph
+        # (row -> stripe -> graph), so both checksum sides segment exactly —
+        #   predicted[g] = (Σ_{rows∈g} h) · w_r,  actual[g] = Σ_{rows∈g} x
+        from repro.core.checksum import row_checksum
+        bm = self.vals.shape[2]
+        row_graph = jnp.repeat(self.segments, bm)
+        nseg = self.n_slots + 1                    # + overflow (pad stripes)
+        hsum = jax.ops.segment_sum(h.astype(cfg.dtype), row_graph,
+                                   num_segments=nseg,
+                                   indices_are_sorted=True)[:self.n_slots]
+        if w_r is None:
+            w_r = row_checksum(w, cfg.dtype)
+        pred = hsum @ w_r
+        actual = jax.ops.segment_sum(x.astype(cfg.dtype).sum(axis=1),
+                                     row_graph, num_segments=nseg,
+                                     indices_are_sorted=True)[:self.n_slots]
+        return Check(predicted=pred, actual=actual)
+
     def aggregate(self, x, x_r):
         if x.ndim != 2:
             raise ValueError("block_ell backend is single-graph ([n, g]); "
                              "batch via engine.batching or the dense backend")
-        from repro.kernels.spmm_abft.ops import spmm_abft
         xr_col = None if x_r is None else x_r.astype(jnp.float32)[:, None]
+        if self.segments is not None:
+            from repro.kernels.spmm_abft.ops import spmm_abft_packed
+            return spmm_abft_packed(self.cols, self.vals, x, xr_col,
+                                    self.segments, num_segments=self.n_slots,
+                                    block_g=self.block_g,
+                                    interpret=self.interpret)
+        from repro.kernels.spmm_abft.ops import spmm_abft
         if self.partition is None:
             out, chk = spmm_abft(self.bell, x, xr_col, block_g=self.block_g,
                                  interpret=self.interpret,

@@ -3,9 +3,11 @@ from .layout import (  # noqa: F401
     coo_to_block_ell,
     dense_to_block_ell,
     pad_block_rows,
+    stack_block_ell,
 )
 from .ops import (  # noqa: F401
     gcn_layer_fused_sparse_kernel,
     spmm_abft,
     spmm_abft_auto,
+    spmm_abft_packed,
 )

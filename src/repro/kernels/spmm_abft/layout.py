@@ -20,7 +20,7 @@ engine and dataset code can use it without touching the accelerator path.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -118,6 +118,47 @@ def pad_block_rows(bell: BlockEll, multiple: int) -> BlockEll:
     block_cols = np.concatenate(
         [bell.block_cols, np.zeros((add, bell.width), np.int32)], axis=0)
     return BlockEll(values=values, block_cols=block_cols, shape=bell.shape)
+
+
+def stack_block_ell(bells: Sequence[BlockEll],
+                    col_block_offsets: Sequence[int],
+                    shape: Optional[Tuple[int, int]] = None,
+                    width_multiple: int = 1) -> BlockEll:
+    """Stack the row-stripes of several BlockElls into one system, shifting
+    each matrix's column-block indices by its offset.
+
+    With ``col_block_offsets`` equal to the cumulative row-stripe offsets of
+    square per-graph matrices this builds the *block-diagonal* packed system
+    of a batch of graphs: graph g's stripes only reference graph g's column
+    stripes, so stripe-local checksum partials segment exactly per graph.
+    Widths pad to the widest input (rounded up to ``width_multiple`` to
+    quantize jit shapes); padding slots keep column-block 0 with zero values
+    — they reference some stripe's X rows but contribute nothing, the same
+    no-masking trick as ELL padding within one matrix.
+    """
+    if not bells:
+        raise ValueError("stack_block_ell needs at least one BlockEll")
+    bm, bk = bells[0].block_m, bells[0].block_k
+    for b in bells:
+        if (b.block_m, b.block_k) != (bm, bk):
+            raise ValueError("all stacked BlockElls must share block sizes; "
+                             f"got {(b.block_m, b.block_k)} vs {(bm, bk)}")
+    if len(col_block_offsets) != len(bells):
+        raise ValueError("one column-block offset per stacked BlockEll")
+    width = max(b.width for b in bells)
+    width = -(-width // max(width_multiple, 1)) * max(width_multiple, 1)
+    total = sum(b.n_block_rows for b in bells)
+    values = np.zeros((total, width, bm, bk), np.float32)
+    block_cols = np.zeros((total, width), np.int32)
+    off = 0
+    for b, coff in zip(bells, col_block_offsets):
+        nbr, w = b.n_block_rows, b.width
+        values[off:off + nbr, :w] = b.values
+        block_cols[off:off + nbr, :w] = b.block_cols + np.int32(coff)
+        off += nbr
+    if shape is None:
+        shape = (total * bm, (int(block_cols.max()) + 1) * bk)
+    return BlockEll(values=values, block_cols=block_cols, shape=shape)
 
 
 def coo_to_block_ell(row: np.ndarray, col: np.ndarray, data: np.ndarray,

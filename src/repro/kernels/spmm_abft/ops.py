@@ -80,6 +80,64 @@ def spmm_abft(bell: BlockEll, x: jax.Array, xr: Optional[jax.Array] = None,
                                             actual=stripe_sums.sum())
 
 
+def spmm_abft_packed(cols: jax.Array, vals: jax.Array, x: jax.Array,
+                     xr: Optional[jax.Array], segments: jax.Array,
+                     *, num_segments: int, block_g: int = 128,
+                     interpret: bool = False
+                     ) -> Tuple[jax.Array, Optional[Check]]:
+    """Block-diagonal packed SpMM with *per-graph* fused check corners.
+
+    ``cols``/``vals`` are the staged (possibly traced) block-ELL arrays of a
+    block-diagonal packed system (``engine.batching.pack_graphs``) with
+    square blocks, ``x`` the stacked [rows, g] combination output covering
+    every padded row, ``xr`` the stacked carried eq.-5 column (or ``None``
+    to disable checking), and ``segments`` the [n_block_rows] stripe → graph
+    id map (padding stripes carry id ``num_segments`` and are dropped).
+
+    Because the checksum is linear and each graph owns whole contiguous
+    stripes, segment-summing the kernel's per-stripe partials decomposes the
+    batch check *exactly* into one eq.-6 corner per graph:
+
+        actual[g] = Σ_{stripes of g} Σ out_stripe
+        pred[g]   = Σ_{rows of g} (S x_r)_row
+
+    so a flipped bit in one packed graph perturbs only that graph's corner.
+    Everything here is shape-static, so the whole call jits with
+    ``cols``/``vals``/``segments`` as traced per-batch arguments — no
+    recompile across batches of the same packed shape.
+    Returns (out [rows, g], Check(predicted [G], actual [G]) | None).
+    """
+    nbm, width, bm, bk = vals.shape
+    if bm != bk:
+        raise ValueError("block-diagonal packing needs square blocks; "
+                         f"got block_m={bm}, block_k={bk}")
+    rows = nbm * bm
+    if x.shape[0] != rows:
+        raise ValueError(f"x covers {x.shape[0]} rows; packed system has "
+                         f"{rows} (= {nbm} stripes x {bm})")
+    g = x.shape[1]
+    gp = -(-g // block_g) * block_g
+    xp = jnp.pad(x, [(0, 0), (0, gp - g)]) if gp != g else x
+    want_check = xr is not None
+    xrp = (jnp.zeros((rows, 1), jnp.float32) if xr is None
+           else xr.astype(jnp.float32))
+    out, stripe_sums, extra = spmm_abft_kernel(cols, vals, xp, xrp,
+                                               interpret=interpret)
+    out = out[:, :g]
+    if not want_check:
+        return out, None
+    # per-stripe partials -> per-graph corners; padding stripes fall in the
+    # explicit overflow segment (id == num_segments) and are sliced away.
+    pred_stripe = extra[:, 0].reshape(nbm, bm).sum(axis=1)
+    pred = jax.ops.segment_sum(pred_stripe, segments,
+                               num_segments=num_segments + 1,
+                               indices_are_sorted=True)[:num_segments]
+    actual = jax.ops.segment_sum(stripe_sums[:, 0], segments,
+                                 num_segments=num_segments + 1,
+                                 indices_are_sorted=True)[:num_segments]
+    return out, Check(predicted=pred, actual=actual)
+
+
 def spmm_abft_auto(bell: BlockEll, x: jax.Array,
                    xr: Optional[jax.Array] = None, *, block_g: int = 128
                    ) -> Tuple[jax.Array, Check]:

@@ -1,86 +1,242 @@
 """Batched multi-graph GCN serving driver on the unified engine.
 
-Variable-size graphs arrive as a stream, get bucketed/padded into fixed
-[B, N, N] shapes (``repro.engine.batching``), and every batch runs one
-jitted engine step (dense batched backend — one compile per bucket) under
-``ABFTGuard``: a flagged batch retries, a persistently flagged batch would
-restore.  Reports graphs/sec over the sustained phase.
+Variable-size graphs arrive as a stream and are batched one of two ways:
+
+* ``--backend dense``      — bucketed zero-padding into [B, N, N] dense
+  batches (one compile per bucket), O(B·N²·F) per bucket regardless of
+  sparsity;
+* ``--backend block_ell``  — block-diagonal packing into ONE block-ELL
+  system per batch (``engine.batching.pack_graphs``): each graph pads only
+  to the block size, aggregation runs through the spmm_abft Pallas kernel,
+  and the fused epilogue segment-sums the per-stripe checksum partials into
+  *per-graph* eq.-6 corners — serving cost scales with nnz, not N².
+
+Both paths run under ``ABFTGuard.run_step_graphs``: the step emits a
+per-graph verdict vector, so a flagged batch retries *only the flagged
+graphs* (a small re-batch) instead of replaying the whole bucket; a
+persistently flagged step falls back to restore->replay->verify.  Per-layer
+``w_r`` is folded once at weight-load time (``engine.fold_w_r``), not
+recomputed per step.  Reports graphs/sec over the sustained phase plus the
+stream-order per-graph verdicts.
 
     PYTHONPATH=src python -m repro.launch.serve_gcn --graphs 64 --batch 8 \
-        --buckets 64,128 --abft fused
+        --backend block_ell --block 32 --abft fused
 """
 from __future__ import annotations
 
 import argparse
 import time
-from typing import Optional, Sequence
+from typing import List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.abft import ABFTConfig
+from repro.core.abft import ABFTConfig, per_graph_report, summarize
 from repro.core.gcn import init_gcn
-from repro.engine import Graph, GraphBatch, gcn_apply, make_batches, \
+from repro.engine import Graph, GraphBatch, PackedGraphs, fold_w_r, \
+    gcn_forward, make_batches, make_packed_batches, pack_graphs, \
     synth_graph_stream
+from repro.engine.backends import BlockEllBackend
 from repro.runtime import ABFTGuard
+
+Batch = Union[GraphBatch, PackedGraphs]
 
 
 def make_serve_step(params, cfg: ABFTConfig):
-    """Jitted (s, h0) -> (logits, metrics) batched engine step.
+    """Jitted (s, h0) -> (logits, metrics) batched dense engine step.
 
     One compile per distinct (batch, bucket) shape; the dense backend
-    broadcasts over the leading batch axis, so the whole batch contributes
-    batched scalar checks reduced into one replicated report.
+    broadcasts over the leading batch axis, so the batch contributes
+    batched scalar checks — reduced into one replicated report AND kept
+    per-graph for the guard's partial retry.
     """
     @jax.jit
     def step(s, h0):
-        logits, report = gcn_apply(params, Graph(s=s, h0=h0), cfg,
-                                   backend="dense")
+        logits, checks = gcn_forward(params, Graph(s=s, h0=h0), cfg,
+                                     backend="dense")
+        report = summarize(checks, cfg)
+        gflags, grel = per_graph_report(checks, cfg, s.shape[0])
         return logits, {"abft_flag": report.flag,
                         "abft_max_rel": report.max_rel,
-                        "abft_n_checks": report.n_checks}
+                        "abft_n_checks": report.n_checks,
+                        "abft_graph_flags": gflags,
+                        "abft_graph_max_rel": grel}
     return step
 
 
-def serve(batches: Sequence[GraphBatch], params, cfg: ABFTConfig,
-          guard: Optional[ABFTGuard] = None, verbose: bool = True):
-    """Run every batch through the guarded jitted step; returns stats."""
+def make_packed_serve_step(params, cfg: ABFTConfig, n_slots: int, *,
+                           block_g: int = 128,
+                           interpret: Optional[bool] = None):
+    """Jitted (cols, vals, segments, h0) -> (logits, metrics) packed step.
+
+    The packed block-ELL arrays are *arguments*, not baked-in constants, so
+    every batch of the same packed shape shares one compile; the segmented
+    epilogue's per-graph corners feed both the replicated report and the
+    per-graph verdict vector.
+    """
+    interpret = (jax.default_backend() != "tpu" if interpret is None
+                 else interpret)
+
+    @jax.jit
+    def step(cols, vals, segments, h0):
+        bk = BlockEllBackend.from_staged(cols, vals, segments, n_slots, cfg,
+                                         block_g=block_g,
+                                         interpret=interpret)
+        logits, checks = gcn_forward(params, Graph(s=None, h0=h0), cfg,
+                                     backend=bk)
+        report = summarize(checks, cfg)
+        gflags, grel = per_graph_report(checks, cfg, n_slots)
+        return logits, {"abft_flag": report.flag,
+                        "abft_max_rel": report.max_rel,
+                        "abft_n_checks": report.n_checks,
+                        "abft_graph_flags": gflags,
+                        "abft_graph_max_rel": grel}
+    return step
+
+
+def _packed_args(pb: PackedGraphs) -> Tuple[jax.Array, ...]:
+    return (jnp.asarray(pb.bell.block_cols), jnp.asarray(pb.bell.values),
+            jnp.asarray(pb.stripe_graph), jnp.asarray(pb.h0))
+
+
+class _PackedRunner:
+    """Per-shape jitted packed steps + the per-graph retry closure."""
+
+    def __init__(self, params, cfg: ABFTConfig, block_g: int):
+        self.params, self.cfg = params, cfg
+        self.block_g = block_g
+        self._steps = {}
+
+    def step_for(self, pb: PackedGraphs):
+        key = (pb.bell.values.shape, pb.h0.shape, pb.n_slots)
+        if key not in self._steps:
+            self._steps[key] = make_packed_serve_step(
+                self.params, self.cfg, pb.n_slots, block_g=self.block_g)
+        return self._steps[key]
+
+    def retry_fn(self, pb: PackedGraphs):
+        """retry(out, idx): re-pack ONLY the flagged graphs into a small
+        block-diagonal system (same block size as the parent batch),
+        re-run, and patch their logit rows back — the unflagged graphs'
+        verified rows are untouched.  Sub-pack steps share the same
+        per-shape cache, so a flaky chip retrying one graph per batch
+        compiles once, not per batch."""
+        def retry(out, idx):
+            items = [pb.items[i] for i in idx]
+            sub = pack_graphs(items, block=pb.block,
+                              stripe_multiple=pb.stripe_multiple,
+                              width_multiple=pb.width_multiple)
+            sub_logits, sub_metrics = self.step_for(sub)(*_packed_args(sub))
+            out = np.asarray(out).copy()
+            for k, gi in enumerate(idx):
+                o, n = pb.row_offsets[gi], pb.n_nodes[gi]
+                so, sn = sub.row_offsets[k], sub.n_nodes[k]
+                out[o:o + n] = np.asarray(sub_logits)[so:so + sn]
+            return out, sub_metrics
+        return retry
+
+
+def _dense_retry_fn(step, b: GraphBatch):
+    """retry(out, idx): re-run only the flagged slots as a smaller dense
+    sub-batch and patch their logits back."""
+    def retry(out, idx):
+        sub_logits, sub_metrics = step(jnp.asarray(b.s[idx]),
+                                       jnp.asarray(b.h0[idx]))
+        out = np.asarray(out).copy()
+        out[idx] = np.asarray(sub_logits)
+        return out, sub_metrics
+    return retry
+
+
+def serve(batches: Sequence[Batch], params, cfg: ABFTConfig,
+          guard: Optional[ABFTGuard] = None, verbose: bool = True, *,
+          block_g: int = 128):
+    """Run every batch through the guarded jitted step; returns stats.
+
+    Dispatches per batch type (GraphBatch -> dense, PackedGraphs -> packed
+    block-ELL); both report per-graph verdicts, assembled into stream order
+    via each batch's ``indices``.  Retries re-pack at each batch's own
+    block size (``PackedGraphs.block``).
+    """
     guard = guard if guard is not None else ABFTGuard()
-    step = make_serve_step(params, cfg)
-    # warmup compiles per bucket shape (excluded from the timed phase)
+    params = fold_w_r(params, cfg)
+    dense_step = None
+    packed = _PackedRunner(params, cfg, block_g)
+
+    def run_one(b: Batch, warm: bool):
+        nonlocal dense_step
+        if isinstance(b, PackedGraphs):
+            step, args = packed.step_for(b), _packed_args(b)
+            retry = packed.retry_fn(b)
+        else:
+            if dense_step is None:
+                dense_step = make_serve_step(params, cfg)
+            step = dense_step
+            args = (jnp.asarray(b.s), jnp.asarray(b.h0))
+            retry = _dense_retry_fn(dense_step, b)
+        if warm:
+            out, metrics = step(*args)
+        else:
+            out, metrics = guard.run_step_graphs(step, retry, *args)
+        jax.block_until_ready(metrics["abft_graph_flags"])
+        return out, metrics
+
+    # warmup compiles per distinct shape (excluded from the timed phase)
     shapes = {}
     for b in batches:
-        shapes.setdefault((b.s.shape, b.h0.shape), b)
+        key = (b.s.shape, b.h0.shape) if isinstance(b, GraphBatch) \
+            else (b.bell.values.shape, b.h0.shape, b.n_slots)
+        shapes.setdefault(key, b)
     for b in shapes.values():
-        jax.block_until_ready(step(jnp.asarray(b.s), jnp.asarray(b.h0))[0])
+        jax.block_until_ready(run_one(b, warm=True)[0])
 
     n_graphs = 0
+    n_stream = sum(b.n_graphs for b in batches)
+    graph_flags = np.zeros(n_stream, bool)
+    graph_max_rel = np.zeros(n_stream, np.float32)
     t0 = time.perf_counter()
     for b in batches:
-        logits, _metrics = guard.run_step(step, jnp.asarray(b.s),
-                                          jnp.asarray(b.h0))
+        logits, metrics = run_one(b, warm=False)
         jax.block_until_ready(logits)
         n_graphs += b.n_graphs
+        if b.indices is not None:
+            live = b.indices >= 0
+            graph_flags[b.indices[live]] = \
+                np.asarray(metrics["abft_graph_flags"])[live]
+            graph_max_rel[b.indices[live]] = \
+                np.asarray(metrics["abft_graph_max_rel"])[live]
     dt = time.perf_counter() - t0
     gps = n_graphs / max(dt, 1e-9)
+    kind = "packed block_ell" if any(isinstance(b, PackedGraphs)
+                                     for b in batches) else "dense"
     if verbose:
-        print(f"served {n_graphs} graphs in {len(batches)} batches "
-              f"({len(shapes)} bucket shapes) in {dt*1e3:.1f} ms "
+        print(f"served {n_graphs} graphs in {len(batches)} {kind} batches "
+              f"({len(shapes)} shapes) in {dt*1e3:.1f} ms "
               f"-> {gps:.1f} graphs/sec")
         print(f"guard: steps={guard.steps} flags={guard.flags} "
-              f"retries={guard.retries} flag_rate={guard.flag_rate:.4f} "
+              f"retries={guard.retries} graph_retries={guard.graph_retries} "
+              f"flag_rate={guard.flag_rate:.4f} "
               f"evict={guard.should_evict()}")
     return {"graphs": n_graphs, "batches": len(batches), "seconds": dt,
-            "graphs_per_sec": gps, "flags": guard.flags}
+            "graphs_per_sec": gps, "flags": guard.flags,
+            "graph_retries": guard.graph_retries,
+            "graph_flags": graph_flags, "graph_max_rel": graph_max_rel}
 
 
 def main(argv: Optional[Sequence[str]] = None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--graphs", type=int, default=64)
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--backend", default="dense",
+                    choices=["dense", "block_ell"],
+                    help="dense bucketed padding, or block-diagonal packed "
+                         "block-ELL on the Pallas kernel path")
     ap.add_argument("--buckets", default="64,128",
-                    help="comma list of node-count buckets")
+                    help="comma list of node-count buckets (dense backend)")
+    ap.add_argument("--block", type=int, default=32,
+                    help="square block size of the packed block-ELL layout "
+                         "(block_ell backend; use 128 on TPU)")
     ap.add_argument("--nodes", default="24,120",
                     help="lo,hi node-count range of the synthetic stream")
     ap.add_argument("--feat", type=int, default=16)
@@ -95,12 +251,17 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
     n_lo, n_hi = (int(v) for v in args.nodes.split(","))
     cfg = ABFTConfig(mode=args.abft, threshold=1e-3, relative=True)
     print(f"=== serve_gcn: {args.graphs} graphs, batch {args.batch}, "
-          f"buckets {buckets}, abft={args.abft} "
+          f"backend={args.backend}, abft={args.abft} "
           f"({jax.default_backend()}) ===")
 
     stream = synth_graph_stream(args.graphs, n_lo=n_lo, n_hi=n_hi,
                                 feat=args.feat, seed=args.seed)
-    batches = make_batches(stream, args.batch, buckets)
+    if args.backend == "block_ell":
+        batches: List[Batch] = make_packed_batches(
+            stream, args.batch, block=args.block,
+            stripe_multiple=4, width_multiple=4)
+    else:
+        batches = make_batches(stream, args.batch, buckets)
     params = init_gcn(jax.random.PRNGKey(args.seed),
                       (args.feat, args.hidden, args.classes))
     return serve(batches, params, cfg)

@@ -7,15 +7,28 @@ Policy (per train/serve step):
      outputs (one host read, no extra collective beyond the checksum psum);
   2. flag set  -> retry the step from the same inputs (bounded retries) —
      transient SDC almost never repeats on identical data;
-  3. still flagged -> restore from the last checkpoint and replay — this is
-     the persistent-fault path (bad chip), where the scheduler should also
-     evict the offending host;
+  3. still flagged -> restore from the last checkpoint and *replay the step*
+     — this is the persistent-fault path (bad chip).  The replay is
+     re-verified: a restore whose replay still flags is retried up to
+     ``max_restores`` times and then raised, so the guard never adopts
+     unverified state or reports the failed attempt's metrics as the
+     step's outcome;
   4. track flag-rate statistics: a chip flagging above `evict_rate` is
      reported via `should_evict` for the cluster layer to act on.
 
+Batched multi-graph serving uses :meth:`ABFTGuard.run_step_graphs` instead:
+the step emits a *per-graph* verdict vector (the packed block-ELL segmented
+epilogue or the dense batched checks), and only the flagged graphs are
+retried — a bit flip in one packed graph costs one small re-pack, not a
+whole-bucket replay.
+
 Because the checked step is pure (params, batch) -> outputs, the retry is
 exact replay; no optimizer state was committed for a flagged step (the guard
-runs *before* state adoption).
+runs *before* state adoption).  ``restore_fn`` either rewinds external state
+by side effect (and returns None), or returns the restored *state*, which
+the guard substitutes for the step's first positional argument on replay —
+so ``restore_fn=lambda: ckpt.restore(state)[0]`` rolls training back to the
+checkpoint and the replayed step runs from it.
 """
 from __future__ import annotations
 
@@ -24,12 +37,15 @@ import dataclasses
 import logging
 from typing import Any, Callable, Optional, Tuple
 
+import numpy as np
+
 log = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
 class GuardConfig:
     max_retries: int = 2
+    max_restores: int = 1        # bounded restore->replay->verify attempts
     evict_rate: float = 1e-3     # flags per step above which chip is suspect
     window: int = 1000           # rolling window (steps) for should_evict
     min_samples: int = 100       # steps seen before eviction is judged
@@ -45,6 +61,7 @@ class ABFTGuard:
         self.steps = 0
         self.flags = 0           # lifetime count of flagged steps
         self.retries = 0
+        self.graph_retries = 0   # individual graphs re-run by partial retry
         self.restores = 0
         # per-step flagged? outcomes, newest last; drives the rolling rate —
         # a chip that degraded an hour in must look bad *now*, not diluted
@@ -54,10 +71,12 @@ class ABFTGuard:
 
     def run_step(self, step_fn: Callable[..., Tuple[Any, Any]], *args):
         """step_fn returns (new_state, metrics) where metrics['abft_flag'] is
-        the replicated detection scalar.  Returns the adopted (state, metrics).
+        the replicated detection scalar.  Returns the adopted (state, metrics)
+        — always from a *verified* (unflagged) execution.
         """
         self.steps += 1
         step_flagged = False
+        metrics = None
         for attempt in range(self.cfg.max_retries + 1):
             out, metrics = step_fn(*args)
             flagged = bool(metrics["abft_flag"])
@@ -72,13 +91,107 @@ class ABFTGuard:
             self.retries += int(attempt < self.cfg.max_retries)
             log.error("ABFT flag on step %d (attempt %d): max_rel=%.3e",
                       self.steps, attempt, float(metrics.get("abft_max_rel", -1)))
-        # persistent failure: roll back
+        # persistent failure: roll back, replay, and re-verify
         self._recent.append(True)
-        self.restores += 1
-        if self.restore_fn is not None:
-            log.error("ABFT: persistent fault; restoring from checkpoint")
-            return self.restore_fn(), metrics
-        raise RuntimeError("ABFT: persistent fault and no restore_fn given")
+        return self._restore_and_replay(step_fn, args)
+
+    def run_step_graphs(self, step_fn: Callable[..., Tuple[Any, Any]],
+                        retry_fn: Callable[[Any, np.ndarray],
+                                           Tuple[Any, Any]], *args):
+        """Per-graph guarded batch step for multi-graph serving.
+
+        ``step_fn(*args)`` returns (out, metrics) where
+        ``metrics['abft_graph_flags']`` is the per-graph verdict vector (the
+        packed segmented check corners, or the dense batched checks).  When
+        any graph flags, ``retry_fn(out, flagged_idx)`` re-runs *only* those
+        graphs and returns (patched_out, sub_metrics) with the per-graph
+        entries of ``sub_metrics`` aligned to ``flagged_idx`` — linearity of
+        the checksum makes the per-graph decomposition exact, so the
+        untouched graphs' verified results are kept and the returned metrics
+        reflect the *adopted* executions, not the failed attempts.  Bounded
+        like :meth:`run_step`; persistently flagged graphs fall back to the
+        restore->replay->verify path for the whole step.
+        """
+        self.steps += 1
+        out, metrics = step_fn(*args)
+        flags = np.array(metrics["abft_graph_flags"], dtype=bool).copy()
+        if not flags.any():
+            self._recent.append(False)
+            return out, metrics
+        self.flags += 1
+        grel = None
+        if "abft_graph_max_rel" in metrics:
+            grel = np.array(metrics["abft_graph_max_rel"],
+                            dtype=np.float32).copy()
+        for attempt in range(1, self.cfg.max_retries + 1):
+            idx = np.nonzero(flags)[0]
+            log.error("ABFT: step %d: %d/%d graphs flagged; retrying them "
+                      "(attempt %d)", self.steps, len(idx), len(flags),
+                      attempt)
+            out, sub = retry_fn(out, idx)
+            self.retries += 1
+            self.graph_retries += len(idx)
+            flags[idx] = np.array(sub["abft_graph_flags"],
+                                  dtype=bool)[:len(idx)]
+            if grel is not None and "abft_graph_max_rel" in sub:
+                grel[idx] = np.array(sub["abft_graph_max_rel"],
+                                     dtype=np.float32)[:len(idx)]
+            if not flags.any():
+                log.warning("ABFT: per-graph retry %d succeeded", attempt)
+                self._recent.append(True)
+                metrics = {**metrics, "abft_flag": False,
+                           "abft_graph_flags": flags}
+                # adopted metrics only: the failed attempts' divergences
+                # were replaced along with their outputs — when we cannot
+                # reconstruct max_rel per graph, drop it rather than return
+                # the discarded execution's value under a clean flag
+                if grel is not None:
+                    metrics["abft_graph_max_rel"] = grel
+                    metrics["abft_max_rel"] = grel.max(initial=0.0)
+                else:
+                    metrics.pop("abft_max_rel", None)
+                return out, metrics
+        self._recent.append(True)
+        # batch steps take data operands, not model state: a state-returning
+        # restore_fn cannot be spliced into the args (run_step's convention)
+        return self._restore_and_replay(step_fn, args, adopt_state=False)
+
+    def _restore_and_replay(self, step_fn, args, *,
+                            adopt_state: bool = True) -> Tuple[Any, Any]:
+        """Persistent-fault path: restore, replay the step, verify the
+        replay.  ``restore_fn`` either rewinds external state by side
+        effect (return None) or returns the restored *state*, which — on
+        the :meth:`run_step` path, where the first positional argument IS
+        the state — replaces it for the replay (the checkpoint-rollback
+        convention ``ABFTGuard(restore_fn=lambda: ckpt.restore(state)[0])``
+        that train.py uses).  Batch-serving steps (:meth:`run_step_graphs`)
+        pass ``adopt_state=False``: their args are data operands, so a
+        returned state is ignored.  Never returns flagged metrics; raises
+        after ``max_restores`` failed restore+replay rounds."""
+        if self.restore_fn is None:
+            raise RuntimeError("ABFT: persistent fault and no restore_fn "
+                               "given")
+        for r in range(1, self.cfg.max_restores + 1):
+            log.error("ABFT: persistent fault; restore %d/%d + replay",
+                      r, self.cfg.max_restores)
+            self.restores += 1
+            restored = self.restore_fn()
+            replay_args = args
+            if adopt_state and restored is not None and args:
+                replay_args = (restored,) + tuple(args[1:])
+            out, metrics = step_fn(*replay_args)
+            # batch steps are only required to emit the per-graph vector
+            flag = metrics.get(
+                "abft_flag",
+                np.asarray(metrics["abft_graph_flags"]).any()
+                if "abft_graph_flags" in metrics else True)
+            if not bool(np.asarray(flag).any()):
+                log.warning("ABFT: replay after restore %d verified clean", r)
+                return out, metrics
+        raise RuntimeError(
+            f"ABFT: step still flagged after {self.cfg.max_restores} "
+            f"restore+replay attempt(s) — refusing to adopt unverified "
+            f"state (suspect persistent hardware fault; evict this host)")
 
     @property
     def flag_rate(self) -> float:

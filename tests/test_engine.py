@@ -198,37 +198,50 @@ def test_guard_config_not_shared():
     assert g2.cfg.max_retries == 2
 
 
-def test_guard_rolling_window_evicts_on_recent_flags():
-    cfg = GuardConfig(max_retries=0, evict_rate=0.05, window=20,
-                      min_samples=20)
-    g = ABFTGuard(cfg, restore_fn=lambda: "restored")
+def _flagged_once_step():
+    """A step that flags on its first attempt and passes the retry — the
+    rolling window records it as a flagged step without entering the
+    restore path (whose replay is now re-verified)."""
+    calls = {"n": 0}
 
-    def step(flagged):
-        return "ok", {"abft_flag": flagged, "abft_max_rel": 0.0}
+    def step():
+        calls["n"] += 1
+        return "ok", {"abft_flag": calls["n"] == 1, "abft_max_rel": 0.0}
+    return step
+
+
+def _clean_step():
+    return "ok", {"abft_flag": False, "abft_max_rel": 0.0}
+
+
+def test_guard_rolling_window_evicts_on_recent_flags():
+    cfg = GuardConfig(max_retries=1, evict_rate=0.05, window=20,
+                      min_samples=20)
+    g = ABFTGuard(cfg)
 
     for _ in range(200):                       # long clean history
-        g.run_step(step, False)
+        g.run_step(_clean_step)
     assert not g.should_evict()
     for _ in range(20):                        # chip goes bad NOW
-        g.run_step(step, True)
+        g.run_step(_flagged_once_step())
     assert g.flag_rate == 1.0                  # window sees only the bad run
     assert g.should_evict()
     assert g.lifetime_flag_rate < 0.1          # lifetime average still tiny
     for _ in range(20):                        # recovers: window drains
-        g.run_step(step, False)
+        g.run_step(_clean_step)
     assert g.flag_rate == 0.0
     assert not g.should_evict()
 
 
 def test_guard_window_not_judged_before_min_samples():
-    cfg = GuardConfig(max_retries=0, evict_rate=0.0, window=50,
+    cfg = GuardConfig(max_retries=1, evict_rate=0.0, window=50,
                       min_samples=10)
-    g = ABFTGuard(cfg, restore_fn=lambda: "r")
+    g = ABFTGuard(cfg)
     for _ in range(5):
-        g.run_step(lambda: ("ok", {"abft_flag": True, "abft_max_rel": 0.0}))
+        g.run_step(_flagged_once_step())
     assert not g.should_evict()                # 5 < min_samples
     for _ in range(5):
-        g.run_step(lambda: ("ok", {"abft_flag": True, "abft_max_rel": 0.0}))
+        g.run_step(_flagged_once_step())
     assert g.should_evict()
 
 

@@ -161,12 +161,19 @@ def test_abft_guard_retry_then_restore():
     out, m = g.run_step(flaky_step, 0)
     assert out == 1 and calls["n"] == 3      # two retries then success
 
-    def always_bad(state):
-        return state + 1, {"abft_flag": True, "abft_max_rel": 1.0}
+    # persistent flag: restore must be followed by a verified replay —
+    # the guard adopts the replayed step's output, not the failed attempt's
+    fault = {"on": True}
 
-    g2 = ABFTGuard(restore_fn=lambda: "restored")
-    out, _ = g2.run_step(always_bad, 0)
-    assert out == "restored"
+    def bad_until_restore(state):
+        return state + 1, {"abft_flag": fault["on"], "abft_max_rel": 1.0}
+
+    def restore():
+        fault["on"] = False
+
+    g2 = ABFTGuard(restore_fn=restore)
+    out, m = g2.run_step(bad_until_restore, 0)
+    assert out == 1 and bool(m["abft_flag"]) is False
     assert g2.restores == 1
 
 
