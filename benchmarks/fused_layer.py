@@ -1,0 +1,165 @@
+"""Fused single-pass GCN layer vs the two-pass combination+spmm path.
+
+For every paper-scale layer width (Table II: 16–186 features) this runs one
+checked GCN layer both ways through the engine —
+
+  * two-pass:  X = H W by XLA (HBM round-trip), then the spmm_abft kernel
+               reads X tiles back to aggregate with the fused check;
+  * fused:     the gcn_fused kernel recomputes X tiles in VMEM inside the
+               aggregation sweep (W and w_r resident) — X never exists in
+               HBM;
+
+and reports wall-clock plus the modeled HBM bytes per layer from
+``kernels.gcn_fused.ops.hbm_bytes_{twopass,fused}``.  On CPU the kernels
+run in interpret mode, so wall-clock favors neither path honestly; the
+bytes model is the portable signal (on TPU the byte ratio bounds the
+speedup of this HBM-bound kernel).  Outputs also verify fused-vs-two-pass
+parity and that the clean check never flags.
+
+Writes ``BENCH_fused_layer.json`` (``--json`` to relocate, ``--json ""``
+to disable) so the perf trajectory is tracked across PRs.
+
+    PYTHONPATH=src python -m benchmarks.fused_layer --nodes 512
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import List, Optional, Sequence
+
+# paper Table II GCN widths span 16..186; squares keep in=out per layer
+WIDTHS = (16, 32, 64, 128, 186)
+
+
+def _time(fn, reps: int) -> float:
+    import jax
+    jax.block_until_ready(fn())           # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run_width(width: int, bell, *, seed: int, reps: int,
+              block_g: int, interpret: bool) -> dict:
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.checksum import row_checksum
+    from repro.kernels.gcn_fused.ops import (
+        fused_layer_fits,
+        gcn_fused_layer,
+        hbm_bytes_fused,
+        hbm_bytes_twopass,
+    )
+    from repro.kernels.spmm_abft.ops import spmm_abft
+
+    rng = np.random.default_rng(seed + width)
+    n = bell.shape[0]
+    h = jnp.asarray(rng.normal(0, 0.5, size=(n, width)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 1.0 / np.sqrt(width),
+                               size=(width, width)).astype(np.float32))
+    w_r = row_checksum(w, jnp.float32)
+
+    def twopass():
+        x = h @ w
+        x_r = (h.astype(jnp.float32) @ w_r)[:, None]
+        out, chk = spmm_abft(bell, x, x_r, block_g=block_g,
+                             interpret=interpret)
+        return out, chk
+
+    def fused():
+        return gcn_fused_layer(bell, h, w, w_r, block_g=block_g,
+                               interpret=interpret)
+
+    out_t, chk_t = twopass()
+    out_f, chk_f = fused()
+    err = float(jnp.abs(out_f - out_t).max())
+    div = abs(float(chk_f.predicted) - float(chk_f.actual))
+    assert err < 1e-4, f"fused/two-pass parity broke at width {width}: {err}"
+    assert div < 1e-3 * max(1.0, abs(float(chk_f.actual))), \
+        f"clean fused check diverged at width {width}: {div}"
+
+    bytes_two = hbm_bytes_twopass(bell, width, width, block_g=block_g)
+    bytes_fused = hbm_bytes_fused(bell, width, width, block_g=block_g)
+    return {
+        "width": width,
+        "t_twopass_s": _time(lambda: twopass()[0], reps),
+        "t_fused_s": _time(lambda: fused()[0], reps),
+        "hbm_bytes_twopass": bytes_two,
+        "hbm_bytes_fused": bytes_fused,
+        "hbm_ratio": bytes_fused / bytes_two,
+        "parity_err": err,
+        "clean_divergence": div,
+        "vmem_fits": fused_layer_fits(width, width, bell.block_m,
+                                      bell.block_k, block_g=block_g),
+    }
+
+
+def main(argv: Optional[Sequence[str]] = None) -> List[dict]:
+    import jax
+    import numpy as np
+
+    from repro.core.gcn import normalized_adjacency_dense
+    from repro.kernels.spmm_abft.layout import dense_to_block_ell
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=512)
+    ap.add_argument("--avg-deg", type=int, default=4)
+    ap.add_argument("--block", type=int, default=32,
+                    help="square block size (use 128 on TPU)")
+    ap.add_argument("--block-g", type=int, default=128)
+    ap.add_argument("--widths", default=",".join(map(str, WIDTHS)))
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="BENCH_fused_layer.json",
+                    help="write machine-readable results here ('' disables)")
+    args = ap.parse_args(argv)
+
+    interpret = jax.default_backend() != "tpu"
+    rng = np.random.default_rng(args.seed)
+    n = args.nodes
+    m = n * args.avg_deg // 2
+    e = rng.integers(0, n, size=(3 * m + 16, 2), dtype=np.int64)
+    e = e[e[:, 0] != e[:, 1]]
+    e = np.unique(np.sort(e, axis=1), axis=0)[:m]
+    s = normalized_adjacency_dense(e, n)
+    bell = dense_to_block_ell(s, block_m=args.block, block_k=args.block)
+
+    print(f"=== fused_layer: n={n} block={args.block} "
+          f"tiles={bell.n_block_rows}x{bell.width} "
+          f"({jax.default_backend()}, interpret={interpret}) ===")
+    print(f"{'width':>6} {'two-pass MB':>12} {'fused MB':>10} {'ratio':>7} "
+          f"{'t two-pass':>11} {'t fused':>9}")
+    rows = []
+    for width in (int(w) for w in args.widths.split(",")):
+        r = run_width(width, bell, seed=args.seed, reps=args.reps,
+                      block_g=args.block_g, interpret=interpret)
+        rows.append(r)
+        print(f"{width:>6} {r['hbm_bytes_twopass']/2**20:>12.2f} "
+              f"{r['hbm_bytes_fused']/2**20:>10.2f} {r['hbm_ratio']:>7.3f} "
+              f"{r['t_twopass_s']*1e3:>9.1f}ms {r['t_fused_s']*1e3:>7.1f}ms")
+        assert r["hbm_bytes_fused"] < r["hbm_bytes_twopass"], \
+            f"fused moved MORE modeled bytes at width {width}"
+    if args.json:
+        rec = {"bench": "fused_layer",
+               "device_backend": jax.default_backend(),
+               "interpret": interpret,
+               "config": {"nodes": n, "avg_deg": args.avg_deg,
+                          "block": args.block, "block_g": args.block_g,
+                          "reps": args.reps, "seed": args.seed},
+               "layout": {"n_block_rows": bell.n_block_rows,
+                          "width": bell.width,
+                          "nnz_tiles": bell.nnz_tiles},
+               "widths": rows}
+        with open(args.json, "w") as fh:
+            json.dump(rec, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"wrote {args.json}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

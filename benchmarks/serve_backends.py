@@ -10,11 +10,16 @@ wins).  On CPU the kernel runs in interpret mode, so absolute packed
 numbers are pessimistic; the dense column and the per-mix *shape counts*
 (compiles) are the portable signal.  Run on TPU for the real comparison.
 
+Writes machine-readable results to ``BENCH_serve.json`` (``--json`` to
+relocate, ``--json ""`` to disable) so the serving-perf trajectory is
+tracked across PRs.
+
     PYTHONPATH=src python -m benchmarks.serve_backends --graphs 32
 """
 from __future__ import annotations
 
 import argparse
+import json
 from typing import List, Optional, Sequence
 
 MIXES = (
@@ -48,7 +53,8 @@ def run_mix(name: str, nodes, buckets, block: int, *, graphs: int,
                    params, cfg, verbose=False)
     assert (dense["graph_flags"] == packed["graph_flags"]).all(), \
         "backends disagree on per-graph verdicts"
-    return {"mix": name, "dense_gps": dense["graphs_per_sec"],
+    return {"mix": name, "nodes": list(nodes),
+            "dense_gps": dense["graphs_per_sec"],
             "packed_gps": packed["graphs_per_sec"],
             "dense_s": dense["seconds"], "packed_s": packed["seconds"]}
 
@@ -65,6 +71,8 @@ def main(argv: Optional[Sequence[str]] = None) -> List[dict]:
     ap.add_argument("--abft", default="fused",
                     choices=["none", "split", "fused"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="BENCH_serve.json",
+                    help="write machine-readable results here ('' disables)")
     args = ap.parse_args(argv)
 
     print(f"=== serve_backends: {args.graphs} graphs/mix, batch "
@@ -78,6 +86,18 @@ def main(argv: Optional[Sequence[str]] = None) -> List[dict]:
         rows.append(r)
         print(f"{name:>8} {nodes[0]:>4}-{nodes[1]:<5} "
               f"{r['dense_gps']:>12.1f} {r['packed_gps']:>12.1f}")
+    if args.json:
+        rec = {"bench": "serve_backends",
+               "device_backend": jax.default_backend(),
+               "config": {"graphs": args.graphs, "batch": args.batch,
+                          "feat": args.feat, "hidden": args.hidden,
+                          "classes": args.classes, "abft": args.abft,
+                          "seed": args.seed},
+               "mixes": rows}
+        with open(args.json, "w") as fh:
+            json.dump(rec, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"wrote {args.json}")
     return rows
 
 

@@ -29,6 +29,11 @@ from .batching import (  # noqa: F401
     pack_graphs,
     pad_graph,
     pick_bucket,
+    schedule_packs,
     synth_graph_stream,
 )
-from .sharded import Partition, sharded_spmm_abft  # noqa: F401
+from .sharded import (  # noqa: F401
+    Partition,
+    sharded_gcn_fused,
+    sharded_spmm_abft,
+)

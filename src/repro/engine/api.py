@@ -47,8 +47,14 @@ class Graph:
     ``s`` is the normalized adjacency in any backend format (dense array,
     BCOO, or host-side BlockEll); ``h0`` the dense node features; ``s_c``
     the optional offline column checksum e^T S (precompute once per static
-    graph — recomputed O(nnz) when absent).  Dense ``s``/``h0`` may carry
+    graph — computed once and auto-stashed back here on the first
+    ``gcn_forward`` call when absent).  Dense ``s``/``h0`` may carry
     leading batch axes (batched multi-graph serving).
+
+    The auto-stash assumes a *static* graph: it is invalidated when ``s``
+    is rebound to a new object or the checksum dtype changes, but cannot
+    see in-place mutation of a numpy ``s`` — mutate-in-place callers must
+    reset ``s_c = None`` (or build a fresh Graph) themselves.
     """
 
     s: Any
@@ -71,13 +77,23 @@ def gcn_layer(bk: AggregationBackend, h: Array, w: Array, cfg: ABFTConfig,
     of the computed X: a fault in X would cancel), and the backend's fused
     corner check.  ``fused`` emits that single check; ``split`` adds the
     combination-matmul check (eq. 2–3 baseline); ``none`` emits nothing.
+
+    Backends with a whole-layer hook (:meth:`AggregationBackend.layer` —
+    the block-ELL backend's single-pass fused kernel) take the fused/none
+    modes without ever materializing X; the split baseline needs X for its
+    combination check, so it always runs the generic two-pass path below.
     """
+    if cfg.enabled and w_r is None:
+        w_r = row_checksum(w, cfg.dtype)
+    if cfg.mode != "split":
+        fused = bk.layer(h, w, cfg, w_r=w_r if cfg.enabled else None)
+        if fused is not NotImplemented:
+            h_out, chk = fused
+            return h_out, ([] if chk is None else [chk])
     x = h @ w
     if not cfg.enabled:
         h_out, _ = bk.aggregate(x, None)
         return h_out, []
-    if w_r is None:
-        w_r = row_checksum(w, cfg.dtype)
     x_r = h.astype(cfg.dtype) @ w_r
     h_out, chk = bk.aggregate(x, x_r)
     if cfg.mode == "split":
@@ -120,8 +136,28 @@ def gcn_forward(params: Params, graph: Graph, cfg: ABFTConfig, *,
     if isinstance(backend, AggregationBackend):
         bk = backend
     else:
-        bk = make_backend(graph.s, cfg, backend=backend, s_c=graph.s_c,
+        s_c = graph.s_c
+        if s_c is not None and getattr(graph, "_s_c_auto", False) and (
+                getattr(graph, "_s_c_dtype", None) != cfg.dtype
+                or getattr(graph, "_s_c_src", None) is not graph.s):
+            # an auto-stash from an earlier call under a different checksum
+            # dtype, or for a since-replaced adjacency operand: reusing it
+            # would run this call's checks at a stale precision / against a
+            # stale e^T S.  User-provided s_c is trusted verbatim.  (The
+            # dtype key is the REQUESTED cfg.dtype, not the realized array
+            # dtype, so x64-disabled f64 requests still cache.)
+            s_c = None
+        bk = make_backend(graph.s, cfg, backend=backend, s_c=s_c,
                           partition=partition, **backend_opts)
+        if s_c is None:
+            # stash the backend's (possibly O(nnz)-computed) column checksum
+            # back on the graph: repeated gcn_apply/gcn_forward calls on the
+            # same staged Graph reuse it instead of recomputing every call
+            stashed = getattr(bk, "s_c", None)
+            graph.s_c = stashed
+            graph._s_c_auto = stashed is not None
+            graph._s_c_dtype = cfg.dtype
+            graph._s_c_src = graph.s
     h = graph.h0
     checks: List[Check] = []
     layers = params["layers"]

@@ -93,6 +93,24 @@ class AggregationBackend:
                   ) -> Tuple[Array, Optional[Check]]:
         raise NotImplementedError
 
+    def layer(self, h: Array, w: Array, cfg: ABFTConfig, *,
+              w_r: Optional[Array] = None):
+        """Whole-layer hook: execute H_out = S (H W) plus the eq. 4–6 check
+        in one backend-fused step, returning (h_out, Check | None) — or
+        ``NotImplemented`` to make the engine run the generic two-pass path
+        (combination via XLA, then :meth:`aggregate`).
+
+        Only consulted for the fused/none check modes: the split baseline
+        (eqs. 2–3) checks the combination product X itself, and a layer
+        that never materializes X has nothing for that check to read.
+
+        The ``fused_hits``/``fused_fallbacks`` counters on implementing
+        backends count *decisions*, taken eagerly or at trace time — a
+        jitted step counts once per compile, not once per batch (the
+        serving driver surfaces trace-time fallbacks eagerly instead).
+        """
+        return NotImplemented
+
     def combination_check(self, h: Array, w: Array, x: Array,
                           cfg: ABFTConfig, *, w_r: Optional[Array] = None
                           ) -> Check:
@@ -172,11 +190,19 @@ class BlockEllBackend(AggregationBackend):
     kernel's per-stripe checksum partials segment-sum into one eq.-6 corner
     *per packed graph*, so the Check fields are [n_slots] batched scalars
     and a fault in one graph flags only that graph's corner.
+
+    ``fused_layer=True`` additionally activates the whole-layer hook
+    (:meth:`layer`): fused/none-mode layers run through the single-pass
+    ``kernels/gcn_fused`` kernel — combination, aggregation, and checksum
+    in one HBM traversal — falling back to the two-pass path above when
+    the layer's [f, g] working set exceeds ``vmem_budget``.
     """
 
     def __init__(self, s: Any, cfg: ABFTConfig, *,
                  s_c: Optional[Array] = None, partition=None,
-                 block_g: int = 128, interpret: Optional[bool] = None):
+                 block_g: int = 128, interpret: Optional[bool] = None,
+                 fused_layer: bool = False,
+                 vmem_budget: Optional[int] = None):
         from repro.kernels.spmm_abft.layout import BlockEll, pad_block_rows
         from repro.engine.batching import PackedGraphs
         self.cfg = cfg
@@ -184,6 +210,10 @@ class BlockEllBackend(AggregationBackend):
         self.partition = partition
         self.interpret = (jax.default_backend() != "tpu"
                           if interpret is None else interpret)
+        self.fused_layer = fused_layer
+        self.vmem_budget = vmem_budget
+        self.fused_hits = 0
+        self.fused_fallbacks = 0
         self.segments = None
         self.n_slots = None
         if isinstance(s, PackedGraphs):
@@ -208,7 +238,8 @@ class BlockEllBackend(AggregationBackend):
     @classmethod
     def from_staged(cls, cols: Array, vals: Array, segments: Array,
                     n_slots: int, cfg: ABFTConfig, *, block_g: int = 128,
-                    interpret: bool = False) -> "BlockEllBackend":
+                    interpret: bool = False, fused_layer: bool = False,
+                    vmem_budget: Optional[int] = None) -> "BlockEllBackend":
         """Packed backend over already-staged (possibly traced) arrays.
 
         This is the jit-friendly constructor for batched serving: a jitted
@@ -221,11 +252,54 @@ class BlockEllBackend(AggregationBackend):
         bk.block_g = block_g
         bk.partition = None
         bk.interpret = interpret
+        bk.fused_layer = fused_layer
+        bk.vmem_budget = vmem_budget
+        bk.fused_hits = 0
+        bk.fused_fallbacks = 0
         bk.bell = None
         bk.cols, bk.vals = cols, vals
         bk.segments = segments
         bk.n_slots = n_slots
         return bk
+
+    def layer(self, h, w, cfg, *, w_r=None):
+        """Single-pass fused layer (``kernels/gcn_fused``): the combination
+        H W is recomputed tile-by-tile inside the aggregation sweep with W
+        and w_r VMEM-resident, so X never touches HBM.  Falls back to the
+        engine's two-pass path (returns ``NotImplemented``) when the option
+        is off or the layer's [f, g] working set exceeds the VMEM budget.
+        """
+        if not self.fused_layer:
+            return NotImplemented
+        from repro.kernels.gcn_fused.ops import (
+            FUSED_VMEM_BUDGET,
+            fused_layer_fits,
+            gcn_fused_layer,
+            gcn_fused_packed,
+        )
+        f, g = w.shape
+        bm, bk_ = self.vals.shape[2], self.vals.shape[3]
+        budget = FUSED_VMEM_BUDGET if self.vmem_budget is None \
+            else self.vmem_budget
+        if not fused_layer_fits(f, g, bm, bk_, block_g=self.block_g,
+                                budget=budget):
+            self.fused_fallbacks += 1
+            return NotImplemented
+        self.fused_hits += 1
+        if self.segments is not None:
+            return gcn_fused_packed(self.cols, self.vals, h, w, w_r,
+                                    self.segments, num_segments=self.n_slots,
+                                    block_g=self.block_g,
+                                    interpret=self.interpret)
+        if self.partition is None:
+            return gcn_fused_layer(self.bell, h, w, w_r,
+                                   block_g=self.block_g,
+                                   interpret=self.interpret,
+                                   _staged=(self.cols, self.vals))
+        from .sharded import sharded_gcn_fused
+        return sharded_gcn_fused(self.bell, self.cols, self.vals, h, w, w_r,
+                                 self.partition, block_g=self.block_g,
+                                 interpret=self.interpret)
 
     def combination_check(self, h, w, x, cfg, *, w_r=None):
         if self.segments is None:

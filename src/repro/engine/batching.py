@@ -235,25 +235,77 @@ def pack_graphs(graphs: Sequence[Tuple[np.ndarray, np.ndarray]],
                         width_multiple=width_multiple)
 
 
+def schedule_packs(stripes: Sequence[int], batch_size: int,
+                   stripe_multiple: int = 1) -> List[List[int]]:
+    """Size-aware pack scheduling: first-fit-decreasing bin-packing of graph
+    indices by stripe count into ``ceil(n / batch_size)`` bins of at most
+    ``batch_size`` graphs each.
+
+    Arrival-order chunking makes each batch's stripe total (and therefore
+    its padded kernel shape) track whatever sizes happened to arrive
+    together — a ragged stream yields many distinct jit shapes and batches
+    far above the mean pay ELL/slot padding for their widest member.  FFD
+    instead fills every bin toward the same stripe capacity (the mean,
+    rounded up to ``stripe_multiple`` — the shape quantum), which equalizes
+    packed shapes across batches and cuts padding waste.  Graphs that fit
+    no bin under the capacity spill into the currently-emptiest bin, so the
+    schedule always places every graph.  Returns the per-bin index lists
+    (deterministic: sizes tie-break by arrival position).
+    """
+    n = len(stripes)
+    if n == 0:
+        return []
+    n_bins = -(-n // batch_size)
+    q = max(stripe_multiple, 1)
+    mean_up = -(-sum(stripes) // n_bins)
+    cap = -(-mean_up // q) * q
+    order = sorted(range(n), key=lambda i: (-stripes[i], i))
+    bins: List[List[int]] = [[] for _ in range(n_bins)]
+    load = [0] * n_bins
+    for gi in order:
+        placed = next((b for b in range(n_bins)
+                       if len(bins[b]) < batch_size
+                       and load[b] + stripes[gi] <= cap), None)
+        if placed is None:  # doesn't fit anywhere: emptiest open bin
+            placed = min((b for b in range(n_bins)
+                          if len(bins[b]) < batch_size),
+                         key=lambda b: (load[b], b))
+        bins[placed].append(gi)
+        load[placed] += stripes[gi]
+    return [b for b in bins if b]
+
+
 def make_packed_batches(graphs: Iterable[Tuple[np.ndarray, np.ndarray]],
                         batch_size: int, *, block: int = 32,
-                        stripe_multiple: int = 1, width_multiple: int = 1
-                        ) -> List[PackedGraphs]:
+                        stripe_multiple: int = 1, width_multiple: int = 1,
+                        schedule: str = "size") -> List[PackedGraphs]:
     """Chunk a stream into block-diagonal packed batches of ``batch_size``
-    graph slots (arrival order — no bucket reordering needed: ragged sizes
-    pack densely).  Every batch has exactly ``batch_size`` slots so the
+    graph slots.  Every batch has exactly ``batch_size`` slots so the
     segmented check shape is fixed; stripe/width quantization bounds the
     number of distinct kernel shapes.
+
+    ``schedule="size"`` (default) bin-packs graphs by stripe count with
+    first-fit-decreasing (:func:`schedule_packs`) to equalize packed shapes
+    across batches; ``"arrival"`` keeps plain stream-order chunking.
+    Stream-order per-graph verdicts are preserved either way through each
+    batch's ``indices``.
     """
     graphs = list(graphs)
     _validate_feat_dims(graphs)
+    if schedule not in ("size", "arrival"):
+        raise ValueError(f"schedule {schedule!r} not in ('size', 'arrival')")
+    if schedule == "size":
+        stripes = [-(-s.shape[0] // block) for s, _ in graphs]
+        groups = schedule_packs(stripes, batch_size, stripe_multiple)
+    else:
+        groups = [list(range(lo, min(lo + batch_size, len(graphs))))
+                  for lo in range(0, len(graphs), batch_size)]
     out: List[PackedGraphs] = []
-    for lo in range(0, len(graphs), batch_size):
-        chunk = graphs[lo:lo + batch_size]
+    for idx in groups:
         out.append(pack_graphs(
-            chunk, block=block, n_slots=batch_size,
+            [graphs[i] for i in idx], block=block, n_slots=batch_size,
             stripe_multiple=stripe_multiple, width_multiple=width_multiple,
-            indices=range(lo, lo + len(chunk))))
+            indices=idx))
     return out
 
 

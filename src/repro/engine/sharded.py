@@ -89,3 +89,54 @@ def sharded_spmm_abft(bell, cols: Array, vals: Array, x: Array,
     if not want_check:
         return out, None
     return out, Check(predicted=pred, actual=actual)
+
+
+def sharded_gcn_fused(bell, cols: Array, vals: Array, h: Array, w: Array,
+                      wr: Optional[Array], partition: Partition, *,
+                      block_g: int = 128, interpret: bool = False
+                      ) -> Tuple[Array, Optional[Check]]:
+    """One whole GCN layer out = S (H W) over stripe-sharded (cols, vals)
+    through the single-pass fused kernel, with the psum'd check.
+
+    The fusion composes with the sharding unchanged: H, W, and w_r are
+    replicated (any stripe's column blocks may reference any H row, and W
+    is tiny), each shard sweeps its own stripes recomputing X tiles in
+    VMEM, and the per-shard (predicted, actual) partials psum into the
+    same global eq.-6 corner as the two-pass path — Σ over shards commutes
+    with Σ over rows.  ``wr`` is the folded right checksum W·e (vector or
+    column) or None (check disabled — the kernel statically elides the
+    eq.-5 dots).  Returns (out [n, g] trimmed, Check | None).
+    """
+    from repro.kernels.gcn_fused.kernel import gcn_fused_kernel
+    from repro.kernels.gcn_fused.ops import prepare_fused_operands
+    from repro.kernels.spmm_abft.ops import trim_output
+    from repro.launch.mesh import GraphShardingRules
+
+    g = w.shape[1]
+    want_check = wr is not None
+    hp, wp, wrp = prepare_fused_operands(bell, h, w, wr, block_g)
+
+    axis = partition.axis
+    rules = GraphShardingRules(partition.mesh, axis)
+
+    def body(cols_l, vals_l, h_rep, w_rep, wr_rep):
+        out_l, sums_l, extra_l = gcn_fused_kernel(
+            cols_l, vals_l, h_rep, w_rep, wr_rep, interpret=interpret,
+            with_check=want_check)
+        pred = jax.lax.psum(extra_l.sum(), axis)
+        actual = jax.lax.psum(sums_l.sum(), axis)
+        return out_l, pred, actual
+
+    shard = shard_map(
+        body, mesh=partition.mesh,
+        in_specs=(rules.stripe_spec(), rules.tile_spec(),
+                  rules.activation_spec(), rules.activation_spec(),
+                  rules.activation_spec()),
+        out_specs=(rules.out_spec(), rules.report_spec(),
+                   rules.report_spec()),
+        check_rep=False)  # pallas_call has no replication rule
+    out, pred, actual = shard(cols, vals, hp, wp, wrp)
+    out = trim_output(bell, out, g)
+    if not want_check:
+        return out, None
+    return out, Check(predicted=pred, actual=actual)

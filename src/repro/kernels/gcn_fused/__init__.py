@@ -1,0 +1,15 @@
+"""Single-pass fused GCN-ABFT layer kernel: combination + aggregation +
+checksum in one HBM traversal (see kernel.py for the dataflow)."""
+from .kernel import gcn_fused_kernel  # noqa: F401
+from .ops import (  # noqa: F401
+    FUSED_VMEM_BUDGET,
+    fused_layer_fits,
+    fused_vmem_bytes,
+    gcn_fused_auto,
+    gcn_fused_layer,
+    gcn_fused_packed,
+    hbm_bytes_fused,
+    hbm_bytes_twopass,
+    prepare_fused_operands,
+)
+from .ref import gcn_fused_ref  # noqa: F401

@@ -1,0 +1,222 @@
+"""Public wrappers for the fused GCN-layer kernel: operand padding, the
+final checksum reduction, Check construction, the packed (block-diagonal)
+per-graph variant, and the VMEM / HBM cost models that decide when fusion
+is worthwhile.
+
+CPU has no Pallas TPU backend: pass ``interpret=True`` (tests and the CPU
+engine default do).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.abft import Check
+from repro.kernels.spmm_abft.layout import BlockEll
+from repro.kernels.spmm_abft.ops import (
+    device_block_ell,
+    fit_rows,
+    packed_check_corners,
+    validate_packed_operands,
+)
+
+from .kernel import gcn_fused_kernel
+
+Array = jax.Array
+
+# Conservative per-core VMEM budget for the fused layer's resident + working
+# set.  Real TPU cores have ~16 MB; half of it leaves the scheduler slack
+# for double-buffered DMA and keeps the fallback decision robust across
+# generations.
+FUSED_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def _pad_axis(a: Array, axis: int, multiple: int) -> Array:
+    size = a.shape[axis]
+    pad = -size % multiple
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def _pad_weights(w: Array, wr: Optional[Array], block_g: int
+                 ) -> Tuple[Array, Array]:
+    """W [f, g] -> f32 [fp, gp] and wr (vector/column/None) -> f32 [fp, 1];
+    ``wr=None`` (check disabled) becomes a zero column the specialized
+    kernel never reads.  The ONE place the weight-operand contract lives —
+    the single-graph and packed entry points both pad through here."""
+    f = w.shape[0]
+    wr = (jnp.zeros((f, 1), jnp.float32) if wr is None
+          else wr.astype(jnp.float32).reshape(f, 1))
+    wp = _pad_axis(_pad_axis(w.astype(jnp.float32), 0, block_g), 1, block_g)
+    return wp, _pad_axis(wr, 0, block_g)
+
+
+def prepare_fused_operands(bell: BlockEll, h: Array, w: Array,
+                           wr: Optional[Array], block_g: int
+                           ) -> Tuple[Array, Array, Array]:
+    """The fused kernel's operand contract: H rows padded (or trimmed — see
+    :func:`~repro.kernels.spmm_abft.ops.fit_rows`) to cover every referenced
+    column stripe, both feature axes padded to ``block_g`` lane multiples,
+    and ``wr`` defaulting to zeros (check disabled) in f32.
+
+    Zero padding is exact end to end: padded H columns meet padded W rows
+    (both zero), padded W/wr columns add zero output lanes that the caller
+    trims, and padded H rows are never referenced by any stored tile.
+    """
+    k_pad = max(bell.padded_cols, bell.block_k)
+    hp = _pad_axis(fit_rows(h, k_pad), 1, block_g)
+    wp, wrp = _pad_weights(w, wr, block_g)
+    return hp, wp, wrp
+
+
+def gcn_fused_layer(bell: BlockEll, h: Array, w: Array,
+                    w_r: Optional[Array] = None, *, block_g: int = 128,
+                    interpret: bool = False,
+                    inject: Optional[Tuple[int, int, float]] = None,
+                    _staged: Optional[Tuple[Array, Array]] = None
+                    ) -> Tuple[Array, Optional[Check]]:
+    """out = S (H W) with the single eq. 4–6 check, in ONE kernel sweep.
+
+    ``w_r`` is the folded right checksum W·e ([g_in] vector or [g_in, 1]
+    column; offline at weight-load time — ``engine.fold_w_r``).  ``None``
+    disables checking (mode="none"): the kernel still runs single-pass and
+    statically elides the eq.-5 dots.  Like the two-pass spmm_abft kernel
+    path, checks accumulate in f32 regardless of ``ABFTConfig.dtype``
+    (the TPU-production convention; pair with ``kahan`` off-kernel if f32
+    noise floors matter).
+    ``_staged`` lets a long-lived caller reuse already-staged
+    (block_cols, values) device arrays.
+    Returns (out [n, g], Check(predicted=Σ S H w_r, actual=Σ out) | None).
+    """
+    n, _ = bell.shape
+    g = w.shape[1]
+    cols, vals = _staged if _staged is not None else device_block_ell(bell)
+    want_check = w_r is not None
+    hp, wp, wrp = prepare_fused_operands(bell, h, w, w_r, block_g)
+    out, stripe_sums, extra = gcn_fused_kernel(cols, vals, hp, wp, wrp,
+                                               interpret=interpret,
+                                               inject=inject,
+                                               with_check=want_check)
+    out = out[:n, :g]
+    if not want_check:
+        return out, None
+    return out, Check(predicted=extra[:n, 0].sum(),
+                      actual=stripe_sums.sum())
+
+
+def gcn_fused_packed(cols: Array, vals: Array, h: Array, w: Array,
+                     w_r: Optional[Array], segments: Array, *,
+                     num_segments: int, block_g: int = 128,
+                     interpret: bool = False,
+                     inject: Optional[Tuple[int, int, float]] = None
+                     ) -> Tuple[Array, Optional[Check]]:
+    """Fused layer over a block-diagonal packed batch with *per-graph*
+    eq.-6 corners — the single-pass analogue of ``spmm_abft_packed``.
+
+    The kernel's per-stripe checksum partials segment-sum into one corner
+    per packed graph exactly as in the two-pass path (the checksum is
+    linear and each graph owns whole contiguous stripes), so a fault inside
+    the fused sweep flags only the graph whose stripes it landed in.
+    Everything is shape-static: jits with cols/vals/segments traced.
+    """
+    validate_packed_operands(vals, h.shape[0], "h")
+    g = w.shape[1]
+    want_check = w_r is not None
+    hp = _pad_axis(h, 1, block_g)
+    wp, wrp = _pad_weights(w, w_r, block_g)
+    out, stripe_sums, extra = gcn_fused_kernel(cols, vals, hp, wp, wrp,
+                                               interpret=interpret,
+                                               inject=inject,
+                                               with_check=want_check)
+    out = out[:, :g]
+    if not want_check:
+        return out, None
+    return out, packed_check_corners(stripe_sums, extra, segments,
+                                     num_segments)
+
+
+# ---------------------------------------------------------------------------
+# Cost models: when is fusing the right call?
+# ---------------------------------------------------------------------------
+
+def _lanes(n: int, block_g: int) -> int:
+    return -(-n // block_g) * block_g
+
+
+def fused_vmem_bytes(f: int, g: int, bm: int, bk: int, *,
+                     block_g: int = 128, itemsize: int = 4) -> int:
+    """Model of the fused kernel's peak VMEM working set in bytes.
+
+    Resident across the grid: W [fp, gp] and w_r [fp, 1].  Per step,
+    double-buffered by the pipeline: the S tile [bm, bk] and the H tile
+    [bk, fp].  Plus the output block [bm, gp], the f32 accumulator scratch
+    [bm, gp], the extra-column scratch, and the recomputed x tile [bk, gp].
+    """
+    fp, gp = _lanes(f, block_g), _lanes(g, block_g)
+    resident = fp * gp + fp
+    streamed = 2 * (bm * bk + bk * fp)
+    working = 2 * bm * gp + bk * gp + bm * gp + 2 * bm
+    return itemsize * (resident + streamed + working)
+
+
+def fused_layer_fits(f: int, g: int, bm: int, bk: int, *,
+                     block_g: int = 128,
+                     budget: int = FUSED_VMEM_BUDGET) -> bool:
+    """True when the fused layer's working set fits the VMEM budget — the
+    engine falls back to the two-pass kernel otherwise (W too wide to stay
+    resident)."""
+    return fused_vmem_bytes(f, g, bm, bk, block_g=block_g) <= budget
+
+
+def hbm_bytes_twopass(bell: BlockEll, f: int, g: int, *,
+                      block_g: int = 128, itemsize: int = 4) -> int:
+    """Modeled HBM bytes of one two-pass layer: the XLA combination pass
+    (read H and W, write X, plus the independent eq.-5 column H·w_r) then
+    the spmm_abft kernel pass (read S tiles + index table, read one X tile
+    and one x_r tile per stored slot, write out / sums / extra).
+
+    The tile count is the padded nbm × width table — ELL padding slots are
+    scheduled like real tiles in both paths, so the comparison is fair.
+    """
+    gp = _lanes(g, block_g)
+    nbm, width = bell.n_block_rows, bell.width
+    bm, bk = bell.block_m, bell.block_k
+    tiles = nbm * width
+    k_pad = max(bell.padded_cols, bell.block_k)
+    n = bell.shape[0]
+    combine = n * f + f * g + k_pad * gp            # read H, W; write X
+    eq5 = n * f + f + k_pad                         # read H, w_r; write x_r
+    aggregate = (tiles * (bm * bk + bk * gp + bk)   # S, X, x_r tiles
+                 + nbm * width                      # i32 index table ~ 1 word
+                 + nbm * bm * gp + nbm + nbm * bm)  # out, sums, extra
+    return itemsize * (combine + eq5 + aggregate)
+
+
+def hbm_bytes_fused(bell: BlockEll, f: int, g: int, *,
+                    block_g: int = 128, itemsize: int = 4) -> int:
+    """Modeled HBM bytes of one fused layer: a single kernel pass — read S
+    tiles + index table, read one H tile per stored slot, read W and w_r
+    once (resident thereafter), write out / sums / extra.  X never exists
+    in HBM; H is read through the same tile schedule X was before."""
+    fp, gp = _lanes(f, block_g), _lanes(g, block_g)
+    nbm, width = bell.n_block_rows, bell.width
+    bm, bk = bell.block_m, bell.block_k
+    tiles = nbm * width
+    return itemsize * (tiles * (bm * bk + bk * fp)  # S, H tiles
+                       + nbm * width                # index table
+                       + fp * gp + fp               # W, w_r (once)
+                       + nbm * bm * gp + nbm + nbm * bm)
+
+
+def gcn_fused_auto(bell: BlockEll, h: Array, w: Array,
+                   w_r: Optional[Array] = None, *, block_g: int = 128
+                   ) -> Tuple[Array, Optional[Check]]:
+    """Same as :func:`gcn_fused_layer`, interpret-mode off-TPU."""
+    on_tpu = jax.default_backend() == "tpu"
+    return gcn_fused_layer(bell, h, w, w_r, block_g=block_g,
+                           interpret=not on_tpu)

@@ -23,15 +23,19 @@ def device_block_ell(bell: BlockEll) -> Tuple[jax.Array, jax.Array]:
     return jnp.asarray(bell.block_cols), jnp.asarray(bell.values)
 
 
-def _fit_rows(x: jax.Array, rows: int) -> jax.Array:
+def fit_rows(x: jax.Array, rows: int) -> jax.Array:
     """Pad or trim x's leading axis to ``rows``.  Trimming is sound: it
     only happens when trailing column-blocks of S hold no nonzero tiles,
-    so those x rows are never referenced by any stored tile."""
+    so those x rows are never referenced by any stored tile.  Shared with
+    the fused-layer kernel's operand prep (``kernels/gcn_fused/ops.py``)."""
     if x.shape[0] > rows:
         return x[:rows]
     if x.shape[0] < rows:
         return jnp.pad(x, [(0, rows - x.shape[0])] + [(0, 0)] * (x.ndim - 1))
     return x
+
+
+_fit_rows = fit_rows
 
 
 def prepare_operands(bell: BlockEll, x: jax.Array, xr: Optional[jax.Array],
@@ -80,6 +84,39 @@ def spmm_abft(bell: BlockEll, x: jax.Array, xr: Optional[jax.Array] = None,
                                             actual=stripe_sums.sum())
 
 
+def validate_packed_operands(vals: jax.Array, rows: int, name: str) -> None:
+    """Shared contract of the block-diagonal packed kernels: square blocks
+    (stripe offset == column-block offset) and a row operand covering every
+    padded stripe."""
+    nbm, _width, bm, bk = vals.shape
+    if bm != bk:
+        raise ValueError("block-diagonal packing needs square blocks; "
+                         f"got block_m={bm}, block_k={bk}")
+    if rows != nbm * bm:
+        raise ValueError(f"{name} covers {rows} rows; packed system has "
+                         f"{nbm * bm} (= {nbm} stripes x {bm})")
+
+
+def packed_check_corners(stripe_sums: jax.Array, extra: jax.Array,
+                         segments: jax.Array, num_segments: int) -> Check:
+    """Per-stripe kernel partials -> one eq.-6 check corner per packed
+    graph.  Exact by linearity: each graph owns whole contiguous stripes,
+    so segment-summing decomposes the batch checksum with no cross-talk;
+    padding stripes fall in the explicit overflow segment (id ==
+    num_segments) and are sliced away.  Shared by the two-pass
+    (``spmm_abft_packed``) and single-pass (``gcn_fused_packed``) paths —
+    the overflow-segment convention lives exactly once."""
+    nbm = stripe_sums.shape[0]
+    pred_stripe = extra[:, 0].reshape(nbm, -1).sum(axis=1)
+    pred = jax.ops.segment_sum(pred_stripe, segments,
+                               num_segments=num_segments + 1,
+                               indices_are_sorted=True)[:num_segments]
+    actual = jax.ops.segment_sum(stripe_sums[:, 0], segments,
+                                 num_segments=num_segments + 1,
+                                 indices_are_sorted=True)[:num_segments]
+    return Check(predicted=pred, actual=actual)
+
+
 def spmm_abft_packed(cols: jax.Array, vals: jax.Array, x: jax.Array,
                      xr: Optional[jax.Array], segments: jax.Array,
                      *, num_segments: int, block_g: int = 128,
@@ -107,14 +144,8 @@ def spmm_abft_packed(cols: jax.Array, vals: jax.Array, x: jax.Array,
     recompile across batches of the same packed shape.
     Returns (out [rows, g], Check(predicted [G], actual [G]) | None).
     """
-    nbm, width, bm, bk = vals.shape
-    if bm != bk:
-        raise ValueError("block-diagonal packing needs square blocks; "
-                         f"got block_m={bm}, block_k={bk}")
-    rows = nbm * bm
-    if x.shape[0] != rows:
-        raise ValueError(f"x covers {x.shape[0]} rows; packed system has "
-                         f"{rows} (= {nbm} stripes x {bm})")
+    validate_packed_operands(vals, x.shape[0], "x")
+    rows = x.shape[0]
     g = x.shape[1]
     gp = -(-g // block_g) * block_g
     xp = jnp.pad(x, [(0, 0), (0, gp - g)]) if gp != g else x
@@ -126,16 +157,8 @@ def spmm_abft_packed(cols: jax.Array, vals: jax.Array, x: jax.Array,
     out = out[:, :g]
     if not want_check:
         return out, None
-    # per-stripe partials -> per-graph corners; padding stripes fall in the
-    # explicit overflow segment (id == num_segments) and are sliced away.
-    pred_stripe = extra[:, 0].reshape(nbm, bm).sum(axis=1)
-    pred = jax.ops.segment_sum(pred_stripe, segments,
-                               num_segments=num_segments + 1,
-                               indices_are_sorted=True)[:num_segments]
-    actual = jax.ops.segment_sum(stripe_sums[:, 0], segments,
-                                 num_segments=num_segments + 1,
-                                 indices_are_sorted=True)[:num_segments]
-    return out, Check(predicted=pred, actual=actual)
+    return out, packed_check_corners(stripe_sums, extra, segments,
+                                     num_segments)
 
 
 def spmm_abft_auto(bell: BlockEll, x: jax.Array,

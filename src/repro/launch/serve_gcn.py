@@ -67,13 +67,16 @@ def make_serve_step(params, cfg: ABFTConfig):
 
 def make_packed_serve_step(params, cfg: ABFTConfig, n_slots: int, *,
                            block_g: int = 128,
-                           interpret: Optional[bool] = None):
+                           interpret: Optional[bool] = None,
+                           fused_layer: bool = False):
     """Jitted (cols, vals, segments, h0) -> (logits, metrics) packed step.
 
     The packed block-ELL arrays are *arguments*, not baked-in constants, so
     every batch of the same packed shape shares one compile; the segmented
     epilogue's per-graph corners feed both the replicated report and the
-    per-graph verdict vector.
+    per-graph verdict vector.  ``fused_layer=True`` runs each layer through
+    the single-pass gcn_fused kernel (combination + aggregation + check in
+    one HBM traversal) instead of the two-pass combination-then-spmm path.
     """
     interpret = (jax.default_backend() != "tpu" if interpret is None
                  else interpret)
@@ -82,7 +85,8 @@ def make_packed_serve_step(params, cfg: ABFTConfig, n_slots: int, *,
     def step(cols, vals, segments, h0):
         bk = BlockEllBackend.from_staged(cols, vals, segments, n_slots, cfg,
                                          block_g=block_g,
-                                         interpret=interpret)
+                                         interpret=interpret,
+                                         fused_layer=fused_layer)
         logits, checks = gcn_forward(params, Graph(s=None, h0=h0), cfg,
                                      backend=bk)
         report = summarize(checks, cfg)
@@ -103,17 +107,39 @@ def _packed_args(pb: PackedGraphs) -> Tuple[jax.Array, ...]:
 class _PackedRunner:
     """Per-shape jitted packed steps + the per-graph retry closure."""
 
-    def __init__(self, params, cfg: ABFTConfig, block_g: int):
+    def __init__(self, params, cfg: ABFTConfig, block_g: int,
+                 fused_layer: bool = False):
         self.params, self.cfg = params, cfg
         self.block_g = block_g
+        self.fused_layer = fused_layer
         self._steps = {}
 
     def step_for(self, pb: PackedGraphs):
         key = (pb.bell.values.shape, pb.h0.shape, pb.n_slots)
         if key not in self._steps:
+            if self.fused_layer:
+                self._warn_fallbacks(pb)
             self._steps[key] = make_packed_serve_step(
-                self.params, self.cfg, pb.n_slots, block_g=self.block_g)
+                self.params, self.cfg, pb.n_slots, block_g=self.block_g,
+                fused_layer=self.fused_layer)
         return self._steps[key]
+
+    def _warn_fallbacks(self, pb: PackedGraphs):
+        """The VMEM-budget decision happens at trace time inside the jitted
+        step, where it is invisible to the operator — so surface it eagerly,
+        once per packed shape, from the layer widths we already know."""
+        import warnings
+
+        from repro.kernels.gcn_fused.ops import fused_layer_fits
+
+        bm, bk = pb.bell.values.shape[2:4]
+        wide = [tuple(layer["w"].shape) for layer in self.params["layers"]
+                if not fused_layer_fits(*layer["w"].shape, bm, bk,
+                                        block_g=self.block_g)]
+        if wide:
+            warnings.warn(
+                f"--fused-layer: layer widths {wide} exceed the fused VMEM "
+                f"budget; those layers run the two-pass kernel instead")
 
     def retry_fn(self, pb: PackedGraphs):
         """retry(out, idx): re-pack ONLY the flagged graphs into a small
@@ -151,18 +177,19 @@ def _dense_retry_fn(step, b: GraphBatch):
 
 def serve(batches: Sequence[Batch], params, cfg: ABFTConfig,
           guard: Optional[ABFTGuard] = None, verbose: bool = True, *,
-          block_g: int = 128):
+          block_g: int = 128, fused_layer: bool = False):
     """Run every batch through the guarded jitted step; returns stats.
 
     Dispatches per batch type (GraphBatch -> dense, PackedGraphs -> packed
     block-ELL); both report per-graph verdicts, assembled into stream order
     via each batch's ``indices``.  Retries re-pack at each batch's own
-    block size (``PackedGraphs.block``).
+    block size (``PackedGraphs.block``).  ``fused_layer=True`` selects the
+    single-pass gcn_fused kernel on the packed path (dense path unaffected).
     """
     guard = guard if guard is not None else ABFTGuard()
     params = fold_w_r(params, cfg)
     dense_step = None
-    packed = _PackedRunner(params, cfg, block_g)
+    packed = _PackedRunner(params, cfg, block_g, fused_layer)
 
     def run_one(b: Batch, warm: bool):
         nonlocal dense_step
@@ -210,6 +237,8 @@ def serve(batches: Sequence[Batch], params, cfg: ABFTConfig,
     gps = n_graphs / max(dt, 1e-9)
     kind = "packed block_ell" if any(isinstance(b, PackedGraphs)
                                      for b in batches) else "dense"
+    if fused_layer and kind != "dense":
+        kind += " (fused-layer)"
     if verbose:
         print(f"served {n_graphs} graphs in {len(batches)} {kind} batches "
               f"({len(shapes)} shapes) in {dt*1e3:.1f} ms "
@@ -244,6 +273,10 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
     ap.add_argument("--classes", type=int, default=7)
     ap.add_argument("--abft", default="fused",
                     choices=["none", "split", "fused"])
+    ap.add_argument("--fused-layer", action="store_true",
+                    help="run each packed layer through the single-pass "
+                         "gcn_fused kernel (combination + aggregation + "
+                         "check in one HBM traversal; block_ell backend)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -264,7 +297,7 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
         batches = make_batches(stream, args.batch, buckets)
     params = init_gcn(jax.random.PRNGKey(args.seed),
                       (args.feat, args.hidden, args.classes))
-    return serve(batches, params, cfg)
+    return serve(batches, params, cfg, fused_layer=args.fused_layer)
 
 
 if __name__ == "__main__":

@@ -88,6 +88,40 @@ def test_backend_parity(seed, n, mode):
             assert float(rep.max_rel) < cfg.threshold / 4, (b, rep)
 
 
+@pytest.mark.parametrize("backend", ["dense", "bcoo"])
+def test_gcn_apply_stashes_s_c_on_graph(backend):
+    """Repeated gcn_apply calls on the same staged Graph must not recompute
+    the O(nnz) column checksum: the first call stashes the backend's s_c
+    back on the Graph, and later calls hand that same array to the backend
+    constructor (ISSUE 4 satellite fix)."""
+    s_d, s_b, _, h0 = _graph_triple(5, 96, f=12)
+    s = {"dense": s_d, "bcoo": s_b}[backend]
+    params = init_gcn(jax.random.PRNGKey(5), (12, 8, 3))
+    cfg = ABFTConfig(mode="fused", threshold=1e-3, relative=True)
+
+    g = Graph(s=s, h0=h0)
+    assert g.s_c is None
+    logits_1, rep_1 = gcn_apply(params, g, cfg, backend=backend)
+    assert g.s_c is not None
+    stashed = g.s_c
+    logits_2, rep_2 = gcn_apply(params, g, cfg, backend=backend)
+    assert g.s_c is stashed                    # reused, not recomputed
+    np.testing.assert_array_equal(np.asarray(logits_1),
+                                  np.asarray(logits_2))
+    assert float(rep_1.max_rel) == float(rep_2.max_rel)
+
+    # a different checksum dtype must NOT reuse the auto-stash (it would
+    # silently run the new cfg's checks at the stale precision) — while a
+    # user-provided s_c is trusted verbatim across cfgs
+    cfg64 = ABFTConfig(mode="fused", threshold=1e-3, relative=True,
+                       dtype=jnp.float64)
+    gcn_apply(params, g, cfg64, backend=backend)
+    assert g.s_c is not stashed
+    user = Graph(s=s, h0=h0, s_c=stashed)
+    gcn_apply(params, user, cfg64, backend=backend)
+    assert user.s_c is stashed
+
+
 def test_backend_registry_and_inference():
     s_d, s_b, bell, _ = _graph_triple(3, 64, f=8)
     assert set(BACKENDS) <= set(backend_names())

@@ -1,0 +1,277 @@
+"""Single-pass fused GCN layer kernel (ISSUE 4 tentpole).
+
+Acceptance properties:
+  (a) interpret-mode parity: the fused-layer engine path (combination +
+      aggregation + checksum in one kernel sweep) matches the two-pass
+      block-ELL path AND the dense backend within atol 1e-4 for every ABFT
+      mode, single graphs and block-diagonal packed batches alike;
+  (b) a bit flip injected into the fused kernel's accumulator mid-sweep is
+      flagged by the same eq.-6 check corner — and on the packed path by
+      ONLY the corner of the graph whose stripes it landed in;
+  (c) the VMEM-budget fallback: layers whose [f, g] working set exceeds
+      the budget run the two-pass path (same results), and the budget
+      decision itself is monotone in g;
+  (d) the HBM traffic model: the fused layer moves strictly fewer modeled
+      bytes than two-pass at every paper-scale width (16–186).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.abft import ABFTConfig
+from repro.core.checksum import row_checksum
+from repro.core.gcn import init_gcn, normalized_adjacency_dense
+from repro.engine import Graph, gcn_apply, gcn_forward, make_backend, \
+    pack_graphs
+from repro.engine.backends import BlockEllBackend
+from repro.kernels.gcn_fused import (
+    fused_layer_fits,
+    fused_vmem_bytes,
+    gcn_fused_layer,
+    gcn_fused_packed,
+    gcn_fused_ref,
+    hbm_bytes_fused,
+    hbm_bytes_twopass,
+)
+from repro.kernels.spmm_abft import dense_to_block_ell
+
+
+def random_graph_dense(seed, n, avg_deg=4):
+    rng = np.random.default_rng(seed)
+    m = n * avg_deg // 2
+    e = rng.integers(0, n, size=(3 * m + 16, 2), dtype=np.int64)
+    e = e[e[:, 0] != e[:, 1]]
+    e = np.unique(np.sort(e, axis=1), axis=0)[:m]
+    return normalized_adjacency_dense(e, n)
+
+
+# ---------------------------------------------------------------------------
+# (a) parity: fused kernel vs f64 reference, vs two-pass engine, vs dense
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,n,f,g", [(0, 96, 24, 7), (1, 160, 16, 16),
+                                        (2, 200, 33, 12)])
+def test_fused_kernel_matches_reference(seed, n, f, g):
+    rng = np.random.default_rng(seed)
+    s = random_graph_dense(seed, n)
+    bell = dense_to_block_ell(s, block_m=32, block_k=32)
+    h = rng.normal(0, 0.5, size=(n, f)).astype(np.float32)
+    w = rng.normal(0, 0.3, size=(f, g)).astype(np.float32)
+
+    out, chk = gcn_fused_layer(bell, jnp.asarray(h), jnp.asarray(w),
+                               jnp.asarray(w.sum(axis=1)), block_g=32,
+                               interpret=True)
+    ref_out, ref_pred, ref_act = gcn_fused_ref(bell, h, w)
+    np.testing.assert_allclose(np.asarray(out), ref_out, atol=1e-4)
+    scale = max(1.0, abs(ref_act))
+    assert abs(float(chk.predicted) - ref_pred) / scale < 1e-5
+    assert abs(float(chk.actual) - ref_act) / scale < 1e-5
+    assert abs(float(chk.predicted) - float(chk.actual)) / scale < 1e-5
+
+
+@pytest.mark.parametrize("mode", ["none", "split", "fused"])
+@pytest.mark.parametrize("seed,n", [(0, 96), (7, 160)])
+def test_fused_layer_engine_parity(seed, n, mode):
+    """gcn_apply(fused_layer=True) == two-pass block_ell == dense, every
+    mode.  Split mode exercises the documented fallback (the split check
+    needs X materialized), so its parity is with identical execution."""
+    rng = np.random.default_rng(seed)
+    s_d = random_graph_dense(seed, n)
+    bell = dense_to_block_ell(s_d, block_m=32, block_k=32)
+    h0 = jnp.asarray(rng.normal(0, 0.5, size=(n, 24)).astype(np.float32))
+    params = init_gcn(jax.random.PRNGKey(seed), (24, 16, 5))
+    cfg = ABFTConfig(mode=mode, threshold=1e-3, relative=True)
+
+    logits_d, rep_d = gcn_apply(params, Graph(s=jnp.asarray(s_d), h0=h0),
+                                cfg, backend="dense")
+    logits_2, rep_2 = gcn_apply(params, Graph(s=bell, h0=h0), cfg,
+                                backend="block_ell", block_g=32)
+    logits_f, rep_f = gcn_apply(params, Graph(s=bell, h0=h0), cfg,
+                                backend="block_ell", block_g=32,
+                                fused_layer=True)
+    np.testing.assert_allclose(np.asarray(logits_f), np.asarray(logits_2),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(logits_f), np.asarray(logits_d),
+                               atol=1e-4, rtol=1e-4)
+    assert bool(rep_f.flag) is False
+    assert int(rep_f.n_checks) == int(rep_2.n_checks) == int(rep_d.n_checks)
+    if cfg.enabled:
+        assert float(rep_f.max_rel) < cfg.threshold / 4
+
+
+def test_fused_layer_split_mode_materializes_x():
+    """Split mode must run two-pass even with fused_layer=True: the
+    backend's whole-layer hook is never consulted (fused_hits stays 0)."""
+    s_d = random_graph_dense(3, 96)
+    bell = dense_to_block_ell(s_d, block_m=32, block_k=32)
+    h0 = jnp.asarray(np.random.default_rng(3).normal(
+        0, 0.5, size=(96, 16)).astype(np.float32))
+    params = init_gcn(jax.random.PRNGKey(3), (16, 8, 4))
+    cfg = ABFTConfig(mode="split", threshold=1e-3, relative=True)
+    bk = make_backend(bell, cfg, backend="block_ell", block_g=32,
+                      fused_layer=True)
+    _, checks = gcn_forward(params, Graph(s=bell, h0=h0), cfg, backend=bk)
+    assert bk.fused_hits == 0 and bk.fused_fallbacks == 0
+    assert len(checks) == 4                   # 2 layers x (split + corner)
+
+    cfg_f = ABFTConfig(mode="fused", threshold=1e-3, relative=True)
+    bk_f = make_backend(bell, cfg_f, backend="block_ell", block_g=32,
+                        fused_layer=True)
+    _, checks_f = gcn_forward(params, Graph(s=bell, h0=h0), cfg_f,
+                              backend=bk_f)
+    assert bk_f.fused_hits == 2 and len(checks_f) == 2
+
+
+# ---------------------------------------------------------------------------
+# (b) fault injection inside the fused sweep
+# ---------------------------------------------------------------------------
+
+def test_fused_accumulator_fault_flags():
+    """A delta injected into the fused kernel's accumulator mid-sweep
+    reaches the output and the actual checksum but never the predicted
+    side — the eq.-6 corner must flag it, and the output perturbation must
+    land exactly in the injected stripe."""
+    tau = 1e-4
+    rng = np.random.default_rng(5)
+    n = 160
+    bell = dense_to_block_ell(random_graph_dense(5, n), block_m=32,
+                              block_k=32)
+    h = jnp.asarray(rng.normal(0, 0.5, size=(n, 16)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.3, size=(16, 8)).astype(np.float32))
+    w_r = jnp.asarray(np.asarray(w).sum(axis=1))
+
+    out, chk = gcn_fused_layer(bell, h, w, w_r, block_g=32, interpret=True)
+    clean = abs(float(chk.predicted) - float(chk.actual))
+    assert clean < tau / 4
+
+    delta = 0.25
+    out_bad, chk_bad = gcn_fused_layer(bell, h, w, w_r, block_g=32,
+                                       interpret=True, inject=(1, 0, delta))
+    div = abs(float(chk_bad.predicted) - float(chk_bad.actual))
+    assert div > tau and abs(div - delta) < 1e-4
+    diff = np.abs(np.asarray(out_bad) - np.asarray(out))
+    assert diff[32, 0] > delta / 2            # stripe 1, element (0, 0)
+    diff[32, 0] = 0.0
+    assert float(diff.max(initial=0.0)) < 1e-6
+
+
+def test_fused_packed_fault_isolated_to_one_graph():
+    """Packed batch: parity with the two-pass packed path, and an injected
+    accumulator fault flags ONLY the graph owning the hit stripe."""
+    tau = 1e-4
+    rng = np.random.default_rng(9)
+    sizes = (40, 56, 24)
+    graphs = []
+    for i, n in enumerate(sizes):
+        s = random_graph_dense(20 + i, n)
+        h = rng.normal(0, 0.5, size=(n, 12)).astype(np.float32)
+        graphs.append((s, h))
+    pb = pack_graphs(graphs, block=16)
+    w = rng.normal(0, 0.3, size=(12, 6)).astype(np.float32)
+    w_r = w.sum(axis=1)
+    cfg = ABFTConfig(mode="fused", threshold=tau, relative=False)
+
+    bk = make_backend(pb, cfg, backend="block_ell", block_g=16,
+                      fused_layer=True, interpret=True)
+    h0 = jnp.asarray(pb.h0)
+    x = h0 @ jnp.asarray(w)
+    x_r = h0 @ jnp.asarray(w_r)
+    out_2, chk_2 = bk.aggregate(x, x_r)
+    out_f, chk_f = gcn_fused_packed(bk.cols, bk.vals, h0, jnp.asarray(w),
+                                    jnp.asarray(w_r), bk.segments,
+                                    num_segments=pb.n_slots, block_g=16,
+                                    interpret=True)
+    np.testing.assert_allclose(np.asarray(out_f), np.asarray(out_2),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(chk_f.predicted),
+                               np.asarray(chk_2.predicted), atol=1e-4)
+    assert chk_f.predicted.shape == (pb.n_slots,)
+    clean = np.abs(np.asarray(chk_f.predicted) - np.asarray(chk_f.actual))
+    assert float(clean.max()) < tau / 4
+
+    # hit a stripe owned by graph 1
+    stripe = int(np.argwhere(pb.stripe_graph == 1)[0, 0])
+    _, chk_bad = gcn_fused_packed(bk.cols, bk.vals, h0, jnp.asarray(w),
+                                  jnp.asarray(w_r), bk.segments,
+                                  num_segments=pb.n_slots, block_g=16,
+                                  interpret=True, inject=(stripe, 0, 0.5))
+    div = np.abs(np.asarray(chk_bad.predicted) - np.asarray(chk_bad.actual))
+    assert div[1] > tau
+    assert float(np.delete(div, 1).max()) < tau / 4
+
+
+def test_fused_packed_serving_matches_twopass():
+    """End-to-end guarded serving: --fused-layer and the default two-pass
+    packed path agree on logits shape, per-graph verdicts, and throughput
+    accounting on the same stream."""
+    from repro.engine import make_packed_batches, synth_graph_stream
+    from repro.launch.serve_gcn import serve
+
+    stream = synth_graph_stream(10, n_lo=16, n_hi=56, feat=8, seed=6)
+    params = init_gcn(jax.random.PRNGKey(6), (8, 8, 3))
+    cfg = ABFTConfig(mode="fused", threshold=1e-3, relative=True)
+    batches = make_packed_batches(stream, 4, block=16, stripe_multiple=4,
+                                  width_multiple=4)
+    two = serve(batches, params, cfg, verbose=False)
+    fused = serve(batches, params, cfg, verbose=False, fused_layer=True)
+    assert two["graphs"] == fused["graphs"] == 10
+    assert fused["flags"] == 0
+    np.testing.assert_array_equal(two["graph_flags"], fused["graph_flags"])
+    np.testing.assert_allclose(two["graph_max_rel"], fused["graph_max_rel"],
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# (c) VMEM-budget fallback
+# ---------------------------------------------------------------------------
+
+def test_vmem_budget_fallback_runs_twopass():
+    rng = np.random.default_rng(4)
+    n = 96
+    bell = dense_to_block_ell(random_graph_dense(4, n), block_m=32,
+                              block_k=32)
+    h0 = jnp.asarray(rng.normal(0, 0.5, size=(n, 16)).astype(np.float32))
+    params = init_gcn(jax.random.PRNGKey(4), (16, 8, 4))
+    cfg = ABFTConfig(mode="fused", threshold=1e-3, relative=True)
+
+    bk_small = make_backend(bell, cfg, backend="block_ell", block_g=32,
+                            fused_layer=True, vmem_budget=1024)
+    logits_fb, _ = gcn_forward(params, Graph(s=bell, h0=h0), cfg,
+                               backend=bk_small)
+    assert bk_small.fused_hits == 0 and bk_small.fused_fallbacks == 2
+
+    bk_big = make_backend(bell, cfg, backend="block_ell", block_g=32,
+                          fused_layer=True)
+    logits_f, _ = gcn_forward(params, Graph(s=bell, h0=h0), cfg,
+                              backend=bk_big)
+    assert bk_big.fused_hits == 2 and bk_big.fused_fallbacks == 0
+    np.testing.assert_allclose(np.asarray(logits_fb), np.asarray(logits_f),
+                               atol=1e-4)
+
+
+def test_vmem_model_monotone_and_paper_widths_fit():
+    bm = bk = 128
+    for width in (16, 32, 64, 128, 186):
+        assert fused_layer_fits(width, width, bm, bk)
+    # a transformer-scale output width cannot keep W resident
+    assert not fused_layer_fits(128, 100_000, bm, bk)
+    assert fused_vmem_bytes(16, 16, bm, bk) \
+        <= fused_vmem_bytes(16, 186, bm, bk) \
+        <= fused_vmem_bytes(186, 186, bm, bk)
+
+
+# ---------------------------------------------------------------------------
+# (d) HBM traffic model
+# ---------------------------------------------------------------------------
+
+def test_fused_moves_fewer_modeled_bytes_at_paper_widths():
+    bell = dense_to_block_ell(random_graph_dense(8, 512), block_m=128,
+                              block_k=128)
+    for width in (16, 32, 64, 128, 186):
+        two = hbm_bytes_twopass(bell, width, width)
+        fused = hbm_bytes_fused(bell, width, width)
+        assert fused < two, (width, fused, two)
+    # asymmetric widths: skinny-in/wide-out fuses even better (X is the
+    # wide tensor that never round-trips)
+    assert hbm_bytes_fused(bell, 16, 186) < hbm_bytes_twopass(bell, 16, 186)

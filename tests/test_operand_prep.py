@@ -1,0 +1,119 @@
+"""Edge cases of the kernel operand contract (ISSUE 4 satellite).
+
+``prepare_operands`` / ``trim_output`` (spmm_abft) and
+``prepare_fused_operands`` (gcn_fused) were only exercised implicitly
+through full layer runs.  These pin the tricky paths down directly:
+
+  * the row-TRIM path: when trailing column stripes of S hold no nonzero
+    tiles, X/H rows beyond the last referenced stripe are dropped (sound:
+    no stored tile can read them) — and the kernel result still matches
+    the dense product;
+  * non-lane-multiple feature dims padding up and trimming back;
+  * trim_output round-trips through stripe and lane padding.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.gcn_fused import gcn_fused_layer, prepare_fused_operands
+from repro.kernels.spmm_abft import dense_to_block_ell, spmm_abft
+from repro.kernels.spmm_abft.ops import (
+    fit_rows,
+    prepare_operands,
+    trim_output,
+)
+
+
+def _bell_with_empty_tail_cols(n=96, block=32, seed=0):
+    """S [n, n] whose nonzeros all sit in column block 0 — the trailing
+    column stripes are empty, so padded_cols < n and the x operand TRIMS."""
+    rng = np.random.default_rng(seed)
+    s = np.zeros((n, n), np.float32)
+    s[:, :block] = rng.random((n, block)).astype(np.float32) \
+        * (rng.random((n, block)) < 0.3)
+    bell = dense_to_block_ell(s, block_m=block, block_k=block)
+    assert bell.padded_cols == block < n
+    return s, bell
+
+
+def test_fit_rows_pads_and_trims():
+    x = jnp.arange(12, dtype=jnp.float32).reshape(6, 2)
+    up = fit_rows(x, 9)
+    assert up.shape == (9, 2)
+    assert float(jnp.abs(up[6:]).max()) == 0.0
+    down = fit_rows(x, 4)
+    np.testing.assert_array_equal(np.asarray(down), np.asarray(x[:4]))
+    same = fit_rows(x, 6)
+    assert same.shape == (6, 2)
+
+
+def test_prepare_operands_row_trim_path():
+    s, bell = _bell_with_empty_tail_cols()
+    n = s.shape[0]
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(0, 0.5, size=(n, 8)).astype(np.float32))
+    xp, xrp = prepare_operands(bell, x, None, block_g=32)
+    # trimmed to exactly the referenced stripes, features padded to lanes
+    assert xp.shape == (32, 32)
+    assert xrp.shape == (32, 1)
+    np.testing.assert_allclose(np.asarray(xp[:, :8]), np.asarray(x[:32]))
+    # and the kernel math over the trimmed operand equals the dense product
+    out, chk = spmm_abft(bell, x, block_g=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), s @ np.asarray(x),
+                               atol=1e-5)
+    assert abs(float(chk.predicted) - float(chk.actual)) < 1e-4
+
+
+@pytest.mark.parametrize("g", [1, 7, 31, 33])
+def test_non_lane_multiple_feature_dims(g):
+    rng = np.random.default_rng(g)
+    n = 64
+    s = (rng.random((n, n)) < 0.1).astype(np.float32) * 0.5
+    bell = dense_to_block_ell(s, block_m=32, block_k=32)
+    x = jnp.asarray(rng.normal(0, 0.5, size=(n, g)).astype(np.float32))
+    xp, _ = prepare_operands(bell, x, None, block_g=32)
+    assert xp.shape[1] == -(-g // 32) * 32
+    assert float(jnp.abs(xp[:, g:]).max(initial=0.0)) == 0.0
+    out, _ = spmm_abft(bell, x, block_g=32, interpret=True)
+    assert out.shape == (n, g)
+    np.testing.assert_allclose(np.asarray(out), s @ np.asarray(x), atol=1e-5)
+
+
+def test_trim_output_round_trip():
+    rng = np.random.default_rng(2)
+    n, g = 90, 5                      # n not a block multiple, g not lanes
+    s = (rng.random((n, n)) < 0.15).astype(np.float32) * 0.3
+    bell = dense_to_block_ell(s, block_m=32, block_k=32)
+    padded = jnp.asarray(rng.normal(size=(bell.padded_rows, 32))
+                         .astype(np.float32))
+    trimmed = trim_output(bell, padded, g)
+    assert trimmed.shape == (n, g)
+    np.testing.assert_array_equal(np.asarray(trimmed),
+                                  np.asarray(padded[:n, :g]))
+    # full round-trip through the kernel: padded shapes in, logical out
+    x = jnp.asarray(rng.normal(0, 0.5, size=(n, g)).astype(np.float32))
+    out, _ = spmm_abft(bell, x, block_g=32, interpret=True)
+    assert out.shape == (n, g)
+    np.testing.assert_allclose(np.asarray(out), s @ np.asarray(x), atol=1e-5)
+
+
+def test_prepare_fused_operands_contract():
+    s, bell = _bell_with_empty_tail_cols()
+    rng = np.random.default_rng(3)
+    f, g = 10, 6
+    h = jnp.asarray(rng.normal(size=(s.shape[0], f)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(f, g)).astype(np.float32))
+    hp, wp, wrp = prepare_fused_operands(bell, h, w, None, block_g=32)
+    assert hp.shape == (32, 32)        # rows trimmed, features padded
+    assert wp.shape == (32, 32) and wrp.shape == (32, 1)
+    assert float(jnp.abs(wrp).max(initial=0.0)) == 0.0   # check disabled
+    assert float(jnp.abs(wp[f:]).max(initial=0.0)) == 0.0
+    assert float(jnp.abs(wp[:, g:]).max(initial=0.0)) == 0.0
+    # and the fused layer over the trimmed H equals the dense chain
+    out, chk = gcn_fused_layer(bell, h, w, jnp.asarray(np.asarray(w)
+                                                       .sum(axis=1)),
+                               block_g=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               s @ (np.asarray(h) @ np.asarray(w)),
+                               atol=1e-5)
+    assert abs(float(chk.predicted) - float(chk.actual)) < 1e-4

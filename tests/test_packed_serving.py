@@ -436,3 +436,76 @@ def test_serve_gcn_driver_block_ell_smoke(capsys):
     assert stats["graphs"] == 8
     assert stats["flags"] == 0 and not stats["graph_flags"].any()
     assert "packed block_ell" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# (h) size-aware pack scheduling (ISSUE 4 satellite): FFD by stripe count
+# ---------------------------------------------------------------------------
+
+def test_schedule_packs_equalizes_stripe_loads():
+    from repro.engine import schedule_packs
+
+    # adversarial arrival order: big graphs clustered at the front, so
+    # arrival chunking makes one huge batch and one tiny one
+    stripes = [8, 8, 7, 7, 1, 1, 1, 1]
+    groups = schedule_packs(stripes, batch_size=4, stripe_multiple=1)
+    assert sorted(gi for g in groups for gi in g) == list(range(8))
+    assert all(len(g) <= 4 for g in groups)
+    loads = sorted(sum(stripes[i] for i in g) for g in groups)
+    arrival_loads = sorted((sum(stripes[:4]), sum(stripes[4:])))
+    assert loads == [16, 18]                  # FFD splits 34 near-evenly
+    assert arrival_loads == [4, 30]           # arrival order does not
+    # determinism
+    assert groups == schedule_packs(stripes, 4, 1)
+
+
+def test_schedule_packs_respects_stripe_multiple_quantum():
+    from repro.engine import schedule_packs
+
+    stripes = [5, 4, 3, 3, 2, 1]
+    groups = schedule_packs(stripes, batch_size=3, stripe_multiple=4)
+    loads = [sum(stripes[i] for i in g) for g in groups]
+    # capacity is the mean (9) rounded up to the quantum (12); both bins
+    # land within one quantum of each other
+    assert max(loads) <= 12
+    assert sorted(gi for g in groups for gi in g) == list(range(6))
+
+
+def test_make_packed_batches_size_schedule_cuts_padding():
+    stream = _stream(8, seed=11, n_lo=16, n_hi=120)
+    by_size = make_packed_batches(stream, 4, block=16, stripe_multiple=4)
+    arrival = make_packed_batches(stream, 4, block=16, stripe_multiple=4,
+                                  schedule="arrival")
+    with pytest.raises(ValueError):
+        make_packed_batches(stream, 4, block=16, schedule="nope")
+
+    # every graph served exactly once, stream positions preserved
+    idx = sorted(int(i) for b in by_size for i in b.indices if i >= 0)
+    assert idx == list(range(8))
+    # FFD never allocates more total padded stripes than arrival chunking
+    total = sum(b.bell.n_block_rows for b in by_size)
+    assert total <= sum(b.bell.n_block_rows for b in arrival)
+    # and the batch stripe counts are more even (max batch no larger)
+    assert max(b.bell.n_block_rows for b in by_size) \
+        <= max(b.bell.n_block_rows for b in arrival)
+
+
+def test_serve_size_scheduled_verdicts_stay_stream_ordered():
+    """Size-aware reordering must not scramble per-graph verdicts: serving a
+    size-scheduled packed stream matches the dense backend graph-for-graph
+    in STREAM order, exactly like arrival-order packing."""
+    from repro.launch.serve_gcn import serve
+
+    stream = _stream(10, seed=12, feat=12, n_lo=16, n_hi=90)
+    params = init_gcn(jax.random.PRNGKey(12), (12, 8, 3))
+    cfg = ABFTConfig(mode="fused", threshold=1e-3, relative=True)
+    dense = serve(make_batches(stream, 4, [32, 64, 128]), params, cfg,
+                  verbose=False)
+    packed = serve(make_packed_batches(stream, 4, block=16,
+                                       stripe_multiple=4, width_multiple=2),
+                   params, cfg, verbose=False)
+    assert dense["graphs"] == packed["graphs"] == 10
+    np.testing.assert_array_equal(dense["graph_flags"],
+                                  packed["graph_flags"])
+    np.testing.assert_allclose(dense["graph_max_rel"],
+                               packed["graph_max_rel"], atol=1e-5)

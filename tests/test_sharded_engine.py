@@ -60,13 +60,23 @@ def _parity_case() -> dict:
     part = Partition(_mesh8(), "graph")
     logits_8, rep_8 = gcn_apply(params, graph, cfg, backend="block_ell",
                                 block_g=32, partition=part)
+    # the single-pass fused-layer kernel must compose with the sharding:
+    # same logits, same psum'd report as the two-pass sharded path
+    logits_8f, rep_8f = gcn_apply(params, graph, cfg, backend="block_ell",
+                                  block_g=32, partition=part,
+                                  fused_layer=True)
     return {
         "devices": len(jax.devices()),
         "logit_err": float(np.abs(np.asarray(logits_8)
                                   - np.asarray(logits_1)).max()),
+        "fused_logit_err": float(np.abs(np.asarray(logits_8f)
+                                        - np.asarray(logits_1)).max()),
         "flag_1": bool(rep_1.flag), "flag_8": bool(rep_8.flag),
+        "flag_8f": bool(rep_8f.flag),
         "n_1": int(rep_1.n_checks), "n_8": int(rep_8.n_checks),
+        "n_8f": int(rep_8f.n_checks),
         "max_rel_1": float(rep_1.max_rel), "max_rel_8": float(rep_8.max_rel),
+        "max_rel_8f": float(rep_8f.max_rel),
     }
 
 
@@ -107,9 +117,12 @@ def _fault_case() -> dict:
 
 def _assert_parity(rec: dict):
     assert rec["logit_err"] < 1e-5, rec
+    assert rec["fused_logit_err"] < 1e-4, rec
     assert rec["flag_1"] is False and rec["flag_8"] is False, rec
-    assert rec["n_1"] == rec["n_8"] == 2, rec
+    assert rec["flag_8f"] is False, rec
+    assert rec["n_1"] == rec["n_8"] == rec["n_8f"] == 2, rec
     assert rec["max_rel_1"] < 2.5e-4 and rec["max_rel_8"] < 2.5e-4, rec
+    assert rec["max_rel_8f"] < 2.5e-4, rec
 
 
 def _assert_fault(rec: dict):
