@@ -1,0 +1,164 @@
+"""Fault-localization economics: how many rows must be re-executed to
+recover from one detected fault, per recovery tier?
+
+For each mix, a packed block-ELL batch runs the single-pass fused layer at
+``granularity="stripe"`` while the kernel's accumulator fault-injection
+hook (``inject=(layer, stripe, slot, delta)``) perturbs one accumulator
+element — one experiment per (layer, stripe, slot) point.  Detection is
+asserted to be *exact* (the injected stripe's corner, and only it, flags),
+then the three tiers of the guard's escalation ladder are costed in
+re-executed rows (row x layer re-executions):
+
+  * **stripe**  — the surgical repair (``engine.localize``): the flagged
+    stripe's rows at the flagged layer, plus only the stripes whose cols
+    table references the repaired rows downstream.  The spliced output is
+    asserted bit-for-bit equal to a clean run.
+  * **graph**   — PR 3's per-graph retry: every padded row of the flagged
+    graph, at every layer (the sub-pack re-runs the whole forward).
+  * **step**    — whole-step replay (restore tier): every padded row of
+    the batch, at every layer.
+
+Writes ``BENCH_localization.json`` with the recomputed-rows fractions
+(tier rows / step rows); the strict ordering stripe < graph < step is
+asserted per mix.  CPU runs the kernel in interpret mode — the row counts
+are exact either way, only wall-clock is pessimistic.
+
+    PYTHONPATH=src python -m benchmarks.localization --graphs 6
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import List, Optional, Sequence
+
+MIXES = (
+    # name, node range, block — n_lo >= 2*block so every graph spans >= 2
+    # stripes (single-stripe graphs make stripe and graph retry coincide)
+    ("small", (32, 64), 16),
+    ("wide", (48, 120), 16),
+)
+
+
+def run_mix(name: str, nodes, block: int, *, graphs: int, feat: int,
+            hidden: int, classes: int, seed: int, stride: int,
+            delta: float) -> dict:
+    import jax
+    import numpy as np
+
+    from repro.core.abft import ABFTConfig
+    from repro.core.gcn import init_gcn
+    from repro.engine import fold_w_r, pack_graphs, synth_graph_stream
+    from repro.engine.localize import surgical_stripe_retry
+    from repro.launch.serve_gcn import _packed_args, make_packed_serve_step
+
+    cfg = ABFTConfig(mode="fused", threshold=1e-3, relative=True)
+    stream = synth_graph_stream(graphs, n_lo=nodes[0], n_hi=nodes[1],
+                                feat=feat, seed=seed)
+    pb = pack_graphs(stream, block=block, stripe_multiple=4,
+                     width_multiple=2)
+    params = fold_w_r(init_gcn(jax.random.PRNGKey(seed),
+                               (feat, hidden, classes)), cfg)
+    n_layers = len(params["layers"])
+    args = _packed_args(pb)
+    nbm = pb.bell.n_block_rows
+    width = pb.bell.width
+    bm = pb.block
+    stripe_graph = np.asarray(pb.stripe_graph)
+    stripes_of = {g: int((stripe_graph == g).sum())
+                  for g in range(pb.n_slots)}
+    step_rows_once = nbm * bm * n_layers
+
+    clean_step = make_packed_serve_step(params, cfg, pb.n_slots,
+                                        block_g=block, fused_layer=True,
+                                        granularity="stripe")
+    logits_clean, m_clean = clean_step(*args)
+    assert not bool(np.asarray(m_clean["abft_graph_flags"]).any()), \
+        "clean packed run flagged — raise the threshold or reseed"
+    logits_clean = np.asarray(logits_clean)
+
+    real_stripes = [s for s in range(nbm) if stripe_graph[s] < pb.n_slots
+                    and stripes_of[int(stripe_graph[s])] > 0][::stride]
+    rows = {"stripe": 0, "graph": 0, "step": 0}
+    n_inj = 0
+    for layer in range(n_layers):
+        for stripe in real_stripes:
+            for slot in (0, width - 1):
+                inj_step = make_packed_serve_step(
+                    params, cfg, pb.n_slots, block_g=block,
+                    fused_layer=True, granularity="stripe",
+                    inject=(layer, stripe, slot, delta))
+                out_bad, m_bad = inj_step(*args)
+                sf = np.asarray(m_bad["abft_stripe_flags"])
+                gf = np.asarray(m_bad["abft_graph_flags"])
+                flagged = np.argwhere(sf)
+                assert flagged.shape == (1, 2) and \
+                    tuple(flagged[0]) == (layer, stripe), \
+                    (name, layer, stripe, slot, flagged.tolist())
+                victim = int(stripe_graph[stripe])
+                assert gf.sum() == 1 and gf[victim], (name, layer, stripe)
+                repaired, sub = surgical_stripe_retry(
+                    pb, params, cfg, out_bad, m_bad, block_g=block)
+                assert not sub["abft_graph_flags"].any(), \
+                    (name, layer, stripe, slot)
+                assert np.array_equal(repaired, logits_clean), \
+                    (name, layer, stripe, slot, "splice not bit-exact")
+                rows["stripe"] += int(sub["abft_rows_recomputed"])
+                rows["graph"] += stripes_of[victim] * bm * n_layers
+                rows["step"] += step_rows_once
+                n_inj += 1
+    frac = {k: v / max(rows["step"], 1) for k, v in rows.items()}
+    assert rows["stripe"] < rows["graph"] < rows["step"], (name, rows)
+    return {"mix": name, "nodes": list(nodes), "block": block,
+            "stripes": nbm, "graphs": pb.n_graphs, "layers": n_layers,
+            "injections": n_inj, "rows": rows, "rows_fraction": frac}
+
+
+def main(argv: Optional[Sequence[str]] = None) -> List[dict]:
+    import jax
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graphs", type=int, default=6)
+    ap.add_argument("--feat", type=int, default=8)
+    ap.add_argument("--hidden", type=int, default=8)
+    ap.add_argument("--classes", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stride", type=int, default=1,
+                    help="inject at every stride-th stripe (sweep thinning "
+                         "for CI; 1 = every real stripe)")
+    ap.add_argument("--delta", type=float, default=64.0,
+                    help="accumulator perturbation magnitude")
+    ap.add_argument("--json", default="BENCH_localization.json",
+                    help="write machine-readable results here ('' disables)")
+    args = ap.parse_args(argv)
+
+    print(f"=== localization: {args.graphs} graphs/mix, stride "
+          f"{args.stride} ({jax.default_backend()}) ===")
+    print(f"{'mix':>8} {'inj':>5} {'stripe rows':>12} {'graph rows':>12} "
+          f"{'step rows':>12}  fraction s/g/step")
+    results = []
+    for name, nodes, block in MIXES:
+        r = run_mix(name, nodes, block, graphs=args.graphs, feat=args.feat,
+                    hidden=args.hidden, classes=args.classes,
+                    seed=args.seed, stride=args.stride, delta=args.delta)
+        results.append(r)
+        f = r["rows_fraction"]
+        print(f"{name:>8} {r['injections']:>5} {r['rows']['stripe']:>12} "
+              f"{r['rows']['graph']:>12} {r['rows']['step']:>12}  "
+              f"{f['stripe']:.3f}/{f['graph']:.3f}/1.000")
+    if args.json:
+        rec = {"bench": "localization",
+               "device_backend": jax.default_backend(),
+               "config": {"graphs": args.graphs, "feat": args.feat,
+                          "hidden": args.hidden, "classes": args.classes,
+                          "seed": args.seed, "stride": args.stride,
+                          "delta": args.delta},
+               "mixes": results}
+        with open(args.json, "w") as fh:
+            json.dump(rec, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"wrote {args.json}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

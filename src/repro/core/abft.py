@@ -32,6 +32,13 @@ Array = jax.Array
 
 MODES = ("none", "split", "fused")
 
+# Check granularities, coarsest to finest.  "layer" is one scalar corner per
+# linear chain (the paper's granularity); "graph" segments the corner per
+# packed graph (exact by linearity — PR 3); "stripe" keeps the kernel's
+# per-row-stripe partials as individual corners, so a detected fault names
+# the stripe it corrupted and recovery can re-execute just those rows.
+GRANULARITIES = ("layer", "graph", "stripe")
+
 
 @dataclasses.dataclass(frozen=True)
 class ABFTConfig:
@@ -58,11 +65,27 @@ class ABFTConfig:
         return self.mode != "none"
 
 
-class Check(NamedTuple):
-    """One checksum comparison.  Fields may be scalars or batched scalars."""
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Check:
+    """One checksum comparison.  Fields may be scalars or batched scalars.
+
+    ``granularity`` records what one element of the comparison attributes a
+    fault to — ``"layer"`` (scalar corner per chain), ``"graph"`` (one
+    corner per packed graph), or ``"stripe"`` (one corner per block-ELL
+    row-stripe).  It is static pytree metadata, not a traced value, so
+    checks flow through jit/shard_map unchanged and report reducers can
+    dispatch on it without a device read.
+    """
 
     predicted: Array
     actual: Array
+    granularity: str = "layer"
+
+    def __post_init__(self):
+        if self.granularity not in GRANULARITIES:
+            raise ValueError(f"check granularity {self.granularity!r} not "
+                             f"in {GRANULARITIES}")
 
     def diff(self) -> Array:
         return jnp.abs(self.predicted - self.actual)
@@ -73,6 +96,21 @@ class Check(NamedTuple):
             scale = jnp.maximum(1.0, jnp.abs(self.actual))
             return jnp.any(d > cfg.threshold * scale)
         return jnp.any(d > cfg.threshold)
+
+    def elementwise(self, cfg: ABFTConfig) -> tuple[Array, Array]:
+        """Per-element (flags, rel divergence) — the shared reduction core
+        of :func:`per_graph_report` / :func:`per_stripe_report`."""
+        d = self.diff()
+        scale = jnp.maximum(1.0, jnp.abs(self.actual))
+        f = d > cfg.threshold * (scale if cfg.relative else 1.0)
+        return f, (d / scale).astype(jnp.float32)
+
+    def tree_flatten(self):
+        return (self.predicted, self.actual), self.granularity
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux)
 
 
 class ABFTReport(NamedTuple):
@@ -251,22 +289,49 @@ def summarize(checks: Sequence[Optional[Check]], cfg: ABFTConfig) -> ABFTReport:
 
 
 def per_graph_report(checks: Sequence[Optional[Check]], cfg: ABFTConfig,
-                     n: int) -> tuple[Array, Array]:
+                     n: int, *, segments: Optional[Array] = None
+                     ) -> tuple[Array, Array]:
     """Elementwise twin of :func:`summarize` for batched checks: one verdict
     per graph instead of one reduced step flag.
 
     Every check's fields must be [n] batched scalars (the dense batched
-    backend and the packed block-ELL segmented epilogue both emit these).
-    Returns (flags [n] bool, max_rel [n] f32) — OR / max across checks (i.e.
-    across layers), *not* across graphs, so the serving layer can retry only
-    the flagged graphs.
+    backend and the packed block-ELL segmented epilogue both emit these) —
+    OR, when ``segments`` (the [n_stripes] stripe → graph map) is given,
+    stripe-granular checks whose fields match the segments shape: their
+    per-stripe verdicts reduce onto the owning graphs (OR of flags, max of
+    divergences; padding stripes carry id ``n`` — the overflow segment —
+    and are dropped).  Returns (flags [n] bool, max_rel [n] f32) — OR / max
+    across checks (i.e. across layers), *not* across graphs, so the serving
+    layer can retry only the flagged graphs.
     """
     checks = [c for c in checks if c is not None]
     if not checks or not cfg.enabled:
         return jnp.zeros((n,), bool), jnp.zeros((n,), jnp.float32)
+    seg_shape = None if segments is None else tuple(jnp.shape(segments))
     flags, rels = None, None
     for c in checks:
-        if c.actual.shape != (n,):
+        # dispatch on the check's DECLARED granularity, not on shape alone:
+        # a packed batch whose stripe count happens to equal its slot count
+        # would otherwise read stripe corners as per-graph verdicts and
+        # retry the wrong graphs (adopting the corrupted one)
+        if c.granularity != "stripe" and c.actual.shape == (n,):
+            f, r = c.elementwise(cfg)
+        elif c.granularity == "stripe" and seg_shape is not None \
+                and c.actual.shape == seg_shape:
+            # stripe-granular corners: segment-reduce onto the graphs.
+            # segment_sum-of-bools ORs (empty slots own no stripes -> 0 ->
+            # False); max of rels floors at 0 so the -inf identity of empty
+            # segments never leaks into reporting.
+            fs, rs = c.elementwise(cfg)
+            seg = jnp.asarray(segments)
+            f = jax.ops.segment_sum(fs.astype(jnp.int32), seg,
+                                    num_segments=n + 1,
+                                    indices_are_sorted=True)[:n] > 0
+            r = jnp.maximum(jax.ops.segment_max(rs, seg,
+                                                num_segments=n + 1,
+                                                indices_are_sorted=True)[:n],
+                            0.0)
+        else:
             # a scalar (or otherwise-shaped) check cannot be attributed to
             # one graph; silently broadcasting it would mark every graph
             # flagged and defeat the per-graph retry
@@ -274,13 +339,38 @@ def per_graph_report(checks: Sequence[Optional[Check]], cfg: ABFTConfig,
                 f"per_graph_report needs [n={n}]-batched checks, got "
                 f"shape {c.actual.shape}; use a backend that emits "
                 f"per-graph corners (dense batched / packed block_ell)")
-        d = c.diff()
-        scale = jnp.maximum(1.0, jnp.abs(c.actual))
-        f = d > cfg.threshold * (scale if cfg.relative else 1.0)
-        r = (d / scale).astype(jnp.float32)
         flags = f if flags is None else flags | f
         rels = r if rels is None else jnp.maximum(rels, r)
     return flags, rels
+
+
+def per_stripe_report(checks: Sequence[Optional[Check]], cfg: ABFTConfig,
+                      n_stripes: int) -> tuple[Array, Array]:
+    """Finest-granularity report: one verdict per (check, row-stripe).
+
+    Every check's fields must be [n_stripes] per-stripe corners (the
+    block-ELL backends at ``granularity="stripe"``).  Returns
+    (flags [L, n_stripes] bool, max_rel [L, n_stripes] f32) with one row per
+    check — the layer axis is preserved, NOT reduced, because the surgical
+    retry must know *which layer's* stripe to re-execute (a fault at layer
+    L only dirties downstream values computed from it).
+    """
+    checks = [c for c in checks if c is not None]
+    if not checks or not cfg.enabled:
+        return (jnp.zeros((0, n_stripes), bool),
+                jnp.zeros((0, n_stripes), jnp.float32))
+    flags, rels = [], []
+    for c in checks:
+        if c.actual.shape != (n_stripes,) or c.granularity != "stripe":
+            raise ValueError(
+                f"per_stripe_report needs [n_stripes={n_stripes}] "
+                f"stripe-granular checks, got shape {c.actual.shape} "
+                f"(granularity={c.granularity!r}); build the backend with "
+                f"granularity='stripe'")
+        f, r = c.elementwise(cfg)
+        flags.append(f)
+        rels.append(r)
+    return jnp.stack(flags), jnp.stack(rels)
 
 
 def np_size(x: Array) -> int:

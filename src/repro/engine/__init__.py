@@ -21,6 +21,10 @@ from .backends import (  # noqa: F401
     make_backend,
     register_backend,
 )
+from .localize import (  # noqa: F401
+    gather_stripe_system,
+    surgical_stripe_retry,
+)
 from .batching import (  # noqa: F401
     GraphBatch,
     PackedGraphs,

@@ -82,9 +82,24 @@ def gcn_layer(bk: AggregationBackend, h: Array, w: Array, cfg: ABFTConfig,
     the block-ELL backend's single-pass fused kernel) take the fused/none
     modes without ever materializing X; the split baseline needs X for its
     combination check, so it always runs the generic two-pass path below.
+
+    A passed-in ``w_r`` must have been folded at this config's checksum
+    dtype: consuming a stale fold verbatim would silently run every check
+    at the old precision, so a mismatch raises instead.
     """
     if cfg.enabled and w_r is None:
         w_r = row_checksum(w, cfg.dtype)
+    elif cfg.enabled:
+        # compare against the REALIZED dtype (x64-disabled f64 requests
+        # realize as f32 — same convention as the s_c auto-stash key)
+        want = jax.dtypes.canonicalize_dtype(jnp.dtype(cfg.dtype))
+        if jnp.asarray(w_r).dtype != want:
+            raise ValueError(
+                f"folded w_r has dtype {jnp.asarray(w_r).dtype} but "
+                f"cfg.dtype realizes as {want}: the checks would run at a "
+                f"stale precision.  Re-run engine.fold_w_r(params, cfg) "
+                f"after changing ABFTConfig.dtype (or drop the fold to "
+                f"recompute w_r per step)")
     if cfg.mode != "split":
         fused = bk.layer(h, w, cfg, w_r=w_r if cfg.enabled else None)
         if fused is not NotImplemented:
@@ -121,7 +136,7 @@ def fold_w_r(params: Params, cfg: ABFTConfig) -> Params:
 
 
 def gcn_forward(params: Params, graph: Graph, cfg: ABFTConfig, *,
-                backend=None, partition=None,
+                backend=None, partition=None, return_intermediates=False,
                 **backend_opts) -> Tuple[Array, List[Check]]:
     """Forward pass through all layers; returns (logits, per-layer checks).
 
@@ -132,6 +147,12 @@ def gcn_forward(params: Params, graph: Graph, cfg: ABFTConfig, *,
     checksum chain, so each layer carries its own check — the paper's
     per-layer fused granularity.  Layers carrying a folded ``w_r``
     (:func:`fold_w_r`) skip the per-step row_checksum recompute.
+
+    ``return_intermediates=True`` appends a third result: the tuple of
+    every layer's *input* activations (h_layers[0] is h0, h_layers[l] the
+    post-ReLU input to layer l).  The stripe-surgical retry consumes these
+    to re-execute a flagged layer's stripes from the exact operands the
+    faulted pass read.
     """
     if isinstance(backend, AggregationBackend):
         bk = backend
@@ -160,11 +181,15 @@ def gcn_forward(params: Params, graph: Graph, cfg: ABFTConfig, *,
             graph._s_c_src = graph.s
     h = graph.h0
     checks: List[Check] = []
+    h_layers: List[Array] = []
     layers = params["layers"]
     for i, layer in enumerate(layers):
+        h_layers.append(h)
         h_out, cs = gcn_layer(bk, h, layer["w"], cfg, w_r=layer.get("w_r"))
         checks.extend(cs)
         h = jax.nn.relu(h_out) if i < len(layers) - 1 else h_out
+    if return_intermediates:
+        return h, checks, tuple(h_layers)
     return h, checks
 
 

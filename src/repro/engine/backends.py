@@ -35,12 +35,25 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.abft import ABFTConfig, Check, _total
+from repro.core.abft import GRANULARITIES, ABFTConfig, Check, _total
 from repro.core.checksum import col_checksum
 
 Array = jax.Array
 
 _REGISTRY: Dict[str, Callable[..., "AggregationBackend"]] = {}
+
+
+def _validate_granularity(name: str, granularity: str,
+                          supported: Tuple[str, ...]) -> str:
+    if granularity not in GRANULARITIES:
+        raise ValueError(f"granularity {granularity!r} not in "
+                         f"{GRANULARITIES}")
+    if granularity not in supported:
+        raise ValueError(
+            f"{name} backend supports granularity in {supported}, not "
+            f"{granularity!r}; stripe-granular corners need the block_ell "
+            f"kernel path (per-row-stripe checksum partials)")
+    return granularity
 
 
 def register_backend(name: str):
@@ -81,9 +94,16 @@ class AggregationBackend:
     Constructors take only the options they honour — an unknown or
     inapplicable keyword (``block_g`` on dense, a typo'd ``interpet``)
     raises TypeError instead of being silently dropped.
+
+    ``granularity`` declares what one element of the emitted Check
+    attributes a fault to: ``"layer"`` (one scalar corner per linear
+    chain — the paper's check), ``"graph"`` (one corner per packed /
+    batched graph), or ``"stripe"`` (one corner per block-ELL row-stripe —
+    fault localization; block_ell only).
     """
 
     name = "abstract"
+    granularity = "layer"
 
     def __init__(self, s: Any, cfg: ABFTConfig, *, s_c: Optional[Array] = None,
                  partition=None):
@@ -132,10 +152,16 @@ class DenseBackend(AggregationBackend):
     reduces — this is what batched multi-graph serving runs on."""
 
     def __init__(self, s: Array, cfg: ABFTConfig, *,
-                 s_c: Optional[Array] = None, partition=None):
+                 s_c: Optional[Array] = None, partition=None,
+                 granularity: str = "layer"):
         if partition is not None:
             raise ValueError("dense backend does not support partition=; "
                              "use backend='block_ell'")
+        # "graph" is what the batched leading axes already deliver (one
+        # scalar corner per batch element); "stripe" has no meaning without
+        # the block-ELL row-stripe partials.
+        self.granularity = _validate_granularity("dense", granularity,
+                                                 ("layer", "graph"))
         self.s = jnp.asarray(s)
         self.cfg = cfg
         self.s_c = s_c if s_c is not None else (
@@ -146,7 +172,8 @@ class DenseBackend(AggregationBackend):
         if x_r is None:
             return h_out, None
         pred = jnp.einsum("...k,...k->...", self.s_c, x_r)
-        return h_out, Check(predicted=pred, actual=_total(h_out, self.cfg))
+        return h_out, Check(predicted=pred, actual=_total(h_out, self.cfg),
+                            granularity=self.granularity)
 
 
 @register_backend("bcoo")
@@ -155,10 +182,13 @@ class BcooBackend(AggregationBackend):
     segment-sum (``sparse_col_checksum``) shared across layers/steps."""
 
     def __init__(self, s: Any, cfg: ABFTConfig, *,
-                 s_c: Optional[Array] = None, partition=None):
+                 s_c: Optional[Array] = None, partition=None,
+                 granularity: str = "layer"):
         if partition is not None:
             raise ValueError("bcoo backend does not support partition=; "
                              "use backend='block_ell'")
+        self.granularity = _validate_granularity("bcoo", granularity,
+                                                 ("layer",))
         from repro.core.abft import sparse_col_checksum
         self.s = s
         self.cfg = cfg
@@ -196,13 +226,26 @@ class BlockEllBackend(AggregationBackend):
     ``kernels/gcn_fused`` kernel — combination, aggregation, and checksum
     in one HBM traversal — falling back to the two-pass path above when
     the layer's [f, g] working set exceeds ``vmem_budget``.
+
+    ``granularity="stripe"`` declines every collapse: the kernels' per-
+    row-stripe checksum partials stay individual corners ([n_block_rows]
+    Check fields), so a detected fault names the stripe it corrupted and
+    the guard's surgical retry re-executes only those rows.  Defaults to
+    ``"graph"`` for packed batches and ``"layer"`` otherwise.
+
+    ``inject=(layer, stripe, slot, delta)`` is the CI fault-injection hook
+    threaded to the fused-layer kernel: the given layer's sweep perturbs
+    one accumulator element mid-flight (requires ``fused_layer=True`` —
+    the two-pass kernel has no accumulator hook).
     """
 
     def __init__(self, s: Any, cfg: ABFTConfig, *,
                  s_c: Optional[Array] = None, partition=None,
                  block_g: int = 128, interpret: Optional[bool] = None,
                  fused_layer: bool = False,
-                 vmem_budget: Optional[int] = None):
+                 vmem_budget: Optional[int] = None,
+                 granularity: Optional[str] = None,
+                 inject: Optional[Tuple[int, int, int, float]] = None):
         from repro.kernels.spmm_abft.layout import BlockEll, pad_block_rows
         from repro.engine.batching import PackedGraphs
         self.cfg = cfg
@@ -216,7 +259,10 @@ class BlockEllBackend(AggregationBackend):
         self.fused_fallbacks = 0
         self.segments = None
         self.n_slots = None
-        if isinstance(s, PackedGraphs):
+        packed = isinstance(s, PackedGraphs)
+        self._set_granularity(granularity, packed=packed)
+        self._set_inject(inject)
+        if packed:
             if partition is not None:
                 raise ValueError("packed block-diagonal batches do not "
                                  "support partition= (stripes already "
@@ -235,11 +281,43 @@ class BlockEllBackend(AggregationBackend):
         from repro.kernels.spmm_abft.ops import device_block_ell
         self.cols, self.vals = device_block_ell(s)
 
+    def _set_granularity(self, granularity: Optional[str], *, packed: bool):
+        if granularity is None:
+            granularity = "graph" if packed else "layer"
+        # packed batches must stay at least graph-attributable (the guard's
+        # per-graph retry reads per-graph corners); single systems have no
+        # graph segmentation to offer
+        supported = ("graph", "stripe") if packed else ("layer", "stripe")
+        self.granularity = _validate_granularity("block_ell", granularity,
+                                                 supported)
+
+    def _set_inject(self, inject):
+        if inject is not None:
+            if not self.fused_layer:
+                raise ValueError("inject= needs fused_layer=True (the "
+                                 "accumulator hook lives in the gcn_fused "
+                                 "kernel; the two-pass kernel has none)")
+            if self.partition is not None:
+                raise ValueError("inject= is not plumbed through the "
+                                 "sharded path (sharded_gcn_fused runs the "
+                                 "kernel without the hook) — injecting "
+                                 "there would silently run clean")
+            if len(inject) != 4:
+                raise ValueError("inject is (layer, stripe, slot, delta); "
+                                 f"got {inject!r}")
+        self.inject = inject
+        # which whole-layer call the injection lands in — advanced at trace
+        # time, so a jitted step injects into the same layer every batch
+        self._layer_calls = 0
+
     @classmethod
     def from_staged(cls, cols: Array, vals: Array, segments: Array,
                     n_slots: int, cfg: ABFTConfig, *, block_g: int = 128,
                     interpret: bool = False, fused_layer: bool = False,
-                    vmem_budget: Optional[int] = None) -> "BlockEllBackend":
+                    vmem_budget: Optional[int] = None,
+                    granularity: Optional[str] = None,
+                    inject: Optional[Tuple[int, int, int, float]] = None
+                    ) -> "BlockEllBackend":
         """Packed backend over already-staged (possibly traced) arrays.
 
         This is the jit-friendly constructor for batched serving: a jitted
@@ -260,6 +338,8 @@ class BlockEllBackend(AggregationBackend):
         bk.cols, bk.vals = cols, vals
         bk.segments = segments
         bk.n_slots = n_slots
+        bk._set_granularity(granularity, packed=True)
+        bk._set_inject(inject)
         return bk
 
     def layer(self, h, w, cfg, *, w_r=None):
@@ -286,22 +366,45 @@ class BlockEllBackend(AggregationBackend):
             self.fused_fallbacks += 1
             return NotImplemented
         self.fused_hits += 1
+        inject = None
+        if self.inject is not None and self._layer_calls == self.inject[0]:
+            inject = tuple(self.inject[1:])
+        self._layer_calls += 1
         if self.segments is not None:
             return gcn_fused_packed(self.cols, self.vals, h, w, w_r,
                                     self.segments, num_segments=self.n_slots,
                                     block_g=self.block_g,
-                                    interpret=self.interpret)
+                                    granularity=self.granularity,
+                                    interpret=self.interpret, inject=inject)
         if self.partition is None:
             return gcn_fused_layer(self.bell, h, w, w_r,
                                    block_g=self.block_g,
-                                   interpret=self.interpret,
+                                   granularity=self.granularity,
+                                   interpret=self.interpret, inject=inject,
                                    _staged=(self.cols, self.vals))
         from .sharded import sharded_gcn_fused
         return sharded_gcn_fused(self.bell, self.cols, self.vals, h, w, w_r,
                                  self.partition, block_g=self.block_g,
+                                 granularity=self.granularity,
                                  interpret=self.interpret)
 
     def combination_check(self, h, w, x, cfg, *, w_r=None):
+        if self.granularity == "stripe":
+            # per-stripe eq. 2–3 corners: rows group by stripe (row ->
+            # stripe is just a reshape), matching the aggregate corner's
+            # [n_block_rows] shape so split mode localizes too
+            from repro.core.checksum import row_checksum
+            nbm, bm = self.vals.shape[0], self.vals.shape[2]
+            if w_r is None:
+                w_r = row_checksum(w, cfg.dtype)
+            rows = nbm * bm
+            if h.shape[0] != rows:    # single-graph: pad the stripe residue
+                h = jnp.pad(h, ((0, rows - h.shape[0]), (0, 0)))
+                x = jnp.pad(x, ((0, rows - x.shape[0]), (0, 0)))
+            hsum = h.astype(cfg.dtype).reshape(nbm, bm, -1).sum(axis=1)
+            actual = x.astype(cfg.dtype).reshape(nbm, bm, -1).sum(axis=(1, 2))
+            return Check(predicted=hsum @ w_r, actual=actual,
+                         granularity="stripe")
         if self.segments is None:
             return super().combination_check(h, w, x, cfg, w_r=w_r)
         # per-graph eq. 2–3 corners: rows of h/x are contiguous per graph
@@ -320,7 +423,7 @@ class BlockEllBackend(AggregationBackend):
         actual = jax.ops.segment_sum(x.astype(cfg.dtype).sum(axis=1),
                                      row_graph, num_segments=nseg,
                                      indices_are_sorted=True)[:self.n_slots]
-        return Check(predicted=pred, actual=actual)
+        return Check(predicted=pred, actual=actual, granularity="graph")
 
     def aggregate(self, x, x_r):
         if x.ndim != 2:
@@ -332,17 +435,20 @@ class BlockEllBackend(AggregationBackend):
             return spmm_abft_packed(self.cols, self.vals, x, xr_col,
                                     self.segments, num_segments=self.n_slots,
                                     block_g=self.block_g,
+                                    granularity=self.granularity,
                                     interpret=self.interpret)
         from repro.kernels.spmm_abft.ops import spmm_abft
         if self.partition is None:
             out, chk = spmm_abft(self.bell, x, xr_col, block_g=self.block_g,
+                                 granularity=self.granularity,
                                  interpret=self.interpret,
                                  _staged=(self.cols, self.vals))
             return out, (chk if x_r is not None else None)
         from .sharded import sharded_spmm_abft
         return sharded_spmm_abft(
             self.bell, self.cols, self.vals, x, xr_col, self.partition,
-            block_g=self.block_g, interpret=self.interpret)
+            block_g=self.block_g, granularity=self.granularity,
+            interpret=self.interpret)
 
 
 def make_backend(s: Any, cfg: ABFTConfig, *, backend: Optional[str] = None,

@@ -1,0 +1,195 @@
+"""Stripe-surgical fault recovery: re-execute ONLY the rows a fault hit.
+
+The eq. 4–6 corner is linear, so the packed kernels can keep their
+per-row-stripe checksum partials as individual corners
+(``granularity="stripe"``) — a detected fault then *names the stripe* it
+corrupted instead of condemning a whole graph.  This module turns that
+name into the cheapest exact repair the layout admits:
+
+  1. **gather** the flagged stripes' tile rows + column-index table into a
+     sub-system (:func:`gather_stripe_system`) — the cols table keeps its
+     original column-block indices, so the FULL packed H stays the operand
+     and no re-packing happens;
+  2. **recompute** those stripes through the single-pass fused kernel
+     (``kernels/gcn_fused``).  Each grid stripe accumulates independently
+     in the same slot order over the same tiles, so when the original pass
+     ran the fused kernel the recomputed rows are *bit-for-bit* the values
+     a clean full sweep would have produced.  (A two-pass original is
+     repaired through the same fused recompute: exact up to f32
+     reassociation and re-verified by its own corners, just not bitwise.
+     A layer whose [f, g] working set exceeds the fused VMEM budget
+     escalates instead of running a kernel the engine rejected.);
+  3. **splice** the rows back (through ReLU for non-final layers) and
+     propagate: a repaired stripe's rows are column blocks of the next
+     layer, so only the stripes whose cols table references them (nonzero
+     tiles — block-diagonal keeps this inside the owning graph) need
+     re-execution downstream, not the whole graph;
+  4. **re-verify**: the sub-sweep carries its own per-stripe corners; any
+     corner still flagged aborts the repair and the guard escalates to the
+     per-graph retry tier.
+
+Recovery cost is counted in re-executed rows (``abft_rows_recomputed``):
+a last-layer fault costs one stripe; an early-layer fault costs one stripe
+plus the reachable downstream stripes — strictly less than the per-graph
+retry's rows(graph) x layers whenever a graph spans more than one stripe.
+"""
+from __future__ import annotations
+
+import logging
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.abft import ABFTConfig
+from repro.core.checksum import row_checksum
+from repro.kernels.spmm_abft.layout import BlockEll
+
+log = logging.getLogger(__name__)
+
+
+def gather_stripe_system(bell: BlockEll, stripe_idx) -> BlockEll:
+    """Sub-system holding only ``stripe_idx``'s tile rows.
+
+    The column-block indices are NOT remapped: the sub-system's stripes
+    still gather from the full packed H/X rows, which is what makes the
+    recompute a pure row-subset of the original sweep (same tiles, same
+    slot order, same operand values — bitwise-identical stripe outputs).
+    """
+    idx = np.asarray(stripe_idx, np.int64)
+    return BlockEll(values=bell.values[idx],
+                    block_cols=bell.block_cols[idx],
+                    shape=(int(idx.size) * bell.block_m, bell.shape[1]))
+
+
+def _layer_stripe_flags(sflags: np.ndarray, n_layers: int) -> np.ndarray:
+    """[n_checks, nbm] per-check stripe flags -> [n_layers, nbm].
+
+    Fused mode emits one check per layer; split mode two (combination +
+    corner).  Rows group contiguously per layer, so OR-reducing each
+    layer's group attributes every flag to the layer that must re-execute.
+    """
+    if sflags.ndim != 2 or sflags.shape[0] % n_layers or not sflags.shape[0]:
+        raise ValueError(
+            f"abft_stripe_flags has shape {sflags.shape}; expected "
+            f"[k*{n_layers} checks, n_stripes] (k checks per layer)")
+    per = sflags.shape[0] // n_layers
+    return sflags.reshape(n_layers, per, sflags.shape[1]).any(axis=1)
+
+
+def surgical_stripe_retry(pb, params, cfg: ABFTConfig, out, metrics,
+                          *, block_g: int = 128,
+                          interpret: Optional[bool] = None
+                          ) -> Tuple[np.ndarray, Dict[str, Any]]:
+    """Repair a flagged packed step by re-executing only the hit stripes.
+
+    ``pb`` is the :class:`~repro.engine.batching.PackedGraphs` batch the
+    step ran; ``metrics`` must carry ``abft_stripe_flags`` (the
+    per-(check, stripe) verdicts) and ``abft_h_layers`` (every layer's
+    input activations, ``gcn_forward(..., return_intermediates=True)``).
+    Returns ``(repaired_out, sub_metrics)`` in the guard's stripe-tier
+    contract: ``sub_metrics['abft_graph_flags']`` is the FULL [n_slots]
+    vector (all-False on verified success; the original flags when the
+    repair could not be verified, so the guard escalates), plus the
+    ``abft_rows_recomputed`` / ``abft_stripes_recomputed`` accounting.
+    """
+    from repro.kernels.gcn_fused.ops import gcn_fused_layer
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    layers = params["layers"]
+    n_layers = len(layers)
+    sflags = _layer_stripe_flags(
+        np.asarray(metrics["abft_stripe_flags"], bool), n_layers)
+    h_layers = [np.array(h) for h in metrics["abft_h_layers"]]  # writable
+    if len(h_layers) != n_layers:
+        raise ValueError(f"abft_h_layers carries {len(h_layers)} arrays; "
+                         f"the model has {n_layers} layers")
+    bell = pb.bell
+    bm = bell.block_m
+    stripe_graph = np.asarray(pb.stripe_graph)
+    n_slots = pb.n_slots
+    orig_flags = np.asarray(metrics["abft_graph_flags"], bool).copy()
+
+    def escalate(reason: str):
+        log.error("ABFT stripe repair escalating: %s", reason)
+        return np.asarray(out), {
+            "abft_graph_flags": orig_flags,
+            "abft_rows_recomputed": rows_recomputed,
+            "abft_stripes_recomputed": stripes_recomputed,
+        }
+
+    rows_recomputed = 0
+    stripes_recomputed = 0
+    repaired = np.array(out)                                    # writable
+    graph_rel = np.zeros(n_slots, np.float32)
+    dirty_cols: set = set()          # column blocks whose H rows changed
+    for ell in range(n_layers):
+        flagged = set(np.nonzero(sflags[ell])[0].tolist())
+        if any(stripe_graph[s] >= n_slots for s in flagged):
+            # a padding stripe's corner is 0 = 0 by construction; it
+            # flagging means the batch invariants are broken — do not
+            # guess, hand the step to the coarser tiers
+            return escalate("padding stripe flagged")
+        reach = _reachable_stripes(bell, dirty_cols)
+        reached = {s for s in np.nonzero(reach)[0].tolist()
+                   if stripe_graph[s] < n_slots}
+        todo = sorted(flagged | reached)
+        if not todo:
+            continue
+        sub = gather_stripe_system(bell, todo)
+        w = layers[ell]["w"]
+        w_r = layers[ell].get("w_r")
+        if w_r is None:
+            w_r = row_checksum(w, cfg.dtype)
+        from repro.kernels.gcn_fused.ops import fused_layer_fits
+        if not fused_layer_fits(*w.shape, bell.block_m, bell.block_k,
+                                block_g=block_g):
+            # the engine itself would refuse to run this layer fused
+            # (resident W exceeds the VMEM budget) — recovery must not be
+            # the one place that kernel is forced to run
+            return escalate(f"layer {ell} [f, g]={tuple(w.shape)} exceeds "
+                            f"the fused VMEM budget")
+        sub_out, chk = gcn_fused_layer(
+            sub, jnp.asarray(h_layers[ell]), w, w_r, block_g=block_g,
+            granularity="stripe", interpret=interpret)
+        rows_recomputed += len(todo) * bm
+        stripes_recomputed += len(todo)
+        if bool(chk.flag(cfg)):
+            return escalate(f"recomputed stripes still flagged at layer "
+                            f"{ell}")
+        _, rel = chk.elementwise(cfg)
+        rel = np.asarray(rel)
+        sub_out = np.asarray(sub_out)
+        for k, s in enumerate(todo):
+            r0 = s * bm
+            rows = sub_out[k * bm:(k + 1) * bm]
+            if ell < n_layers - 1:
+                h_layers[ell + 1][r0:r0 + bm] = np.maximum(rows, 0.0)
+            else:
+                repaired[r0:r0 + bm] = rows
+            graph_rel[stripe_graph[s]] = max(graph_rel[stripe_graph[s]],
+                                             float(rel[k]))
+        dirty_cols = set(todo)       # square blocks: stripe s == col block s
+    log.warning("ABFT: stripe-surgical repair verified clean "
+                "(%d stripes / %d rows re-executed)",
+                stripes_recomputed, rows_recomputed)
+    return repaired, {
+        "abft_graph_flags": np.zeros(n_slots, bool),
+        "abft_graph_max_rel": graph_rel,
+        "abft_rows_recomputed": rows_recomputed,
+        "abft_stripes_recomputed": stripes_recomputed,
+    }
+
+
+def _reachable_stripes(bell: BlockEll, col_blocks: set) -> np.ndarray:
+    """[n_block_rows] mask of stripes that read any of ``col_blocks``' rows
+    through a stored (nonzero) tile.  ELL padding tiles alias column-block
+    0 with all-zero values — they must not mark graph 0's stripes dirty."""
+    if not col_blocks:
+        return np.zeros(bell.n_block_rows, bool)
+    hit = np.isin(bell.block_cols,
+                  np.fromiter(col_blocks, np.int64, len(col_blocks)))
+    stored = np.abs(bell.values).max(axis=(2, 3)) > 0
+    return (hit & stored).any(axis=1)

@@ -48,15 +48,29 @@ class Partition:
         return self.mesh.shape[self.axis]
 
 
+def _check_specs(rules, granularity: str):
+    """Check-partial out_specs: psum'd scalars stay replicated; stripe
+    corners stay sharded on the stripe axis and concatenate globally."""
+    spec = rules.stripe_report_spec() if granularity == "stripe" \
+        else rules.report_spec()
+    return (rules.out_spec(), spec, spec)
+
+
 def sharded_spmm_abft(bell, cols: Array, vals: Array, x: Array,
                       xr: Optional[Array], partition: Partition, *,
-                      block_g: int = 128, interpret: bool = False
+                      block_g: int = 128, interpret: bool = False,
+                      granularity: str = "layer"
                       ) -> Tuple[Array, Optional[Check]]:
     """out = S @ X over stripe-sharded (cols, vals) with the psum'd check.
 
     ``cols``/``vals`` are the staged device arrays of ``bell`` (already
     padded so stripes divide the axis); ``x`` is [n, g] replicated; ``xr``
     the carried [n, 1] checksum column or None (check disabled).
+    ``granularity="stripe"`` keeps each shard's per-stripe partials as
+    corners: instead of psum-collapsing, the [nbm_local] vectors stay
+    sharded on the stripe axis and *concatenate* into the global
+    [n_block_rows] per-stripe check — exactly the single-device stripe
+    corners, because each stripe lives on exactly one shard.
     Returns (out [n, g] row-sharded then trimmed, Check | None).
     """
     from repro.kernels.spmm_abft.kernel import spmm_abft_kernel
@@ -73,6 +87,10 @@ def sharded_spmm_abft(bell, cols: Array, vals: Array, x: Array,
     def body(cols_l, vals_l, x_rep, xr_rep):
         out_l, sums_l, extra_l = spmm_abft_kernel(
             cols_l, vals_l, x_rep, xr_rep, interpret=interpret)
+        if granularity == "stripe":
+            nbm_l = sums_l.shape[0]
+            return (out_l, extra_l[:, 0].reshape(nbm_l, -1).sum(axis=1),
+                    sums_l[:, 0])
         pred = jax.lax.psum(extra_l.sum(), axis)
         actual = jax.lax.psum(sums_l.sum(), axis)
         return out_l, pred, actual
@@ -81,19 +99,19 @@ def sharded_spmm_abft(bell, cols: Array, vals: Array, x: Array,
         body, mesh=partition.mesh,
         in_specs=(rules.stripe_spec(), rules.tile_spec(),
                   rules.activation_spec(), rules.activation_spec()),
-        out_specs=(rules.out_spec(), rules.report_spec(),
-                   rules.report_spec()),
+        out_specs=_check_specs(rules, granularity),
         check_rep=False)  # pallas_call has no replication rule
     out, pred, actual = shard(cols, vals, xp, xrp)
     out = trim_output(bell, out, g)
     if not want_check:
         return out, None
-    return out, Check(predicted=pred, actual=actual)
+    return out, Check(predicted=pred, actual=actual, granularity=granularity)
 
 
 def sharded_gcn_fused(bell, cols: Array, vals: Array, h: Array, w: Array,
                       wr: Optional[Array], partition: Partition, *,
-                      block_g: int = 128, interpret: bool = False
+                      block_g: int = 128, interpret: bool = False,
+                      granularity: str = "layer"
                       ) -> Tuple[Array, Optional[Check]]:
     """One whole GCN layer out = S (H W) over stripe-sharded (cols, vals)
     through the single-pass fused kernel, with the psum'd check.
@@ -123,6 +141,10 @@ def sharded_gcn_fused(bell, cols: Array, vals: Array, h: Array, w: Array,
         out_l, sums_l, extra_l = gcn_fused_kernel(
             cols_l, vals_l, h_rep, w_rep, wr_rep, interpret=interpret,
             with_check=want_check)
+        if granularity == "stripe":
+            nbm_l = sums_l.shape[0]
+            return (out_l, extra_l[:, 0].reshape(nbm_l, -1).sum(axis=1),
+                    sums_l[:, 0])
         pred = jax.lax.psum(extra_l.sum(), axis)
         actual = jax.lax.psum(sums_l.sum(), axis)
         return out_l, pred, actual
@@ -132,11 +154,10 @@ def sharded_gcn_fused(bell, cols: Array, vals: Array, h: Array, w: Array,
         in_specs=(rules.stripe_spec(), rules.tile_spec(),
                   rules.activation_spec(), rules.activation_spec(),
                   rules.activation_spec()),
-        out_specs=(rules.out_spec(), rules.report_spec(),
-                   rules.report_spec()),
+        out_specs=_check_specs(rules, granularity),
         check_rep=False)  # pallas_call has no replication rule
     out, pred, actual = shard(cols, vals, hp, wp, wrp)
     out = trim_output(bell, out, g)
     if not want_check:
         return out, None
-    return out, Check(predicted=pred, actual=actual)
+    return out, Check(predicted=pred, actual=actual, granularity=granularity)

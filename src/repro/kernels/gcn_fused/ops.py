@@ -19,6 +19,7 @@ from repro.kernels.spmm_abft.ops import (
     device_block_ell,
     fit_rows,
     packed_check_corners,
+    stripe_check_corners,
     validate_packed_operands,
 )
 
@@ -77,6 +78,7 @@ def prepare_fused_operands(bell: BlockEll, h: Array, w: Array,
 def gcn_fused_layer(bell: BlockEll, h: Array, w: Array,
                     w_r: Optional[Array] = None, *, block_g: int = 128,
                     interpret: bool = False,
+                    granularity: str = "layer",
                     inject: Optional[Tuple[int, int, float]] = None,
                     _staged: Optional[Tuple[Array, Array]] = None
                     ) -> Tuple[Array, Optional[Check]]:
@@ -89,6 +91,8 @@ def gcn_fused_layer(bell: BlockEll, h: Array, w: Array,
     path, checks accumulate in f32 regardless of ``ABFTConfig.dtype``
     (the TPU-production convention; pair with ``kahan`` off-kernel if f32
     noise floors matter).
+    ``granularity="stripe"`` keeps the sweep's per-row-stripe partials as
+    individual corners instead of one scalar (fault localization).
     ``_staged`` lets a long-lived caller reuse already-staged
     (block_cols, values) device arrays.
     Returns (out [n, g], Check(predicted=Σ S H w_r, actual=Σ out) | None).
@@ -105,6 +109,8 @@ def gcn_fused_layer(bell: BlockEll, h: Array, w: Array,
     out = out[:n, :g]
     if not want_check:
         return out, None
+    if granularity == "stripe":
+        return out, stripe_check_corners(stripe_sums, extra)
     return out, Check(predicted=extra[:n, 0].sum(),
                       actual=stripe_sums.sum())
 
@@ -112,7 +118,7 @@ def gcn_fused_layer(bell: BlockEll, h: Array, w: Array,
 def gcn_fused_packed(cols: Array, vals: Array, h: Array, w: Array,
                      w_r: Optional[Array], segments: Array, *,
                      num_segments: int, block_g: int = 128,
-                     interpret: bool = False,
+                     interpret: bool = False, granularity: str = "graph",
                      inject: Optional[Tuple[int, int, float]] = None
                      ) -> Tuple[Array, Optional[Check]]:
     """Fused layer over a block-diagonal packed batch with *per-graph*
@@ -122,6 +128,8 @@ def gcn_fused_packed(cols: Array, vals: Array, h: Array, w: Array,
     per packed graph exactly as in the two-pass path (the checksum is
     linear and each graph owns whole contiguous stripes), so a fault inside
     the fused sweep flags only the graph whose stripes it landed in.
+    ``granularity="stripe"`` keeps the partials un-segmented (one corner
+    per row-stripe) so the fault names the exact stripe.
     Everything is shape-static: jits with cols/vals/segments traced.
     """
     validate_packed_operands(vals, h.shape[0], "h")
@@ -136,6 +144,8 @@ def gcn_fused_packed(cols: Array, vals: Array, h: Array, w: Array,
     out = out[:, :g]
     if not want_check:
         return out, None
+    if granularity == "stripe":
+        return out, stripe_check_corners(stripe_sums, extra)
     return out, packed_check_corners(stripe_sums, extra, segments,
                                      num_segments)
 

@@ -10,4 +10,5 @@ from .ops import (  # noqa: F401
     spmm_abft,
     spmm_abft_auto,
     spmm_abft_packed,
+    stripe_check_corners,
 )

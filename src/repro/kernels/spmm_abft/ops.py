@@ -60,8 +60,25 @@ def trim_output(bell: BlockEll, out: jax.Array, g: int) -> jax.Array:
     return out[:bell.shape[0], :g]
 
 
+def stripe_check_corners(stripe_sums: jax.Array, extra: jax.Array) -> Check:
+    """Per-stripe kernel partials -> one eq.-6 corner PER ROW-STRIPE.
+
+    The finest check granularity the kernels support: the grid already
+    accumulates (actual, predicted) per row-stripe — this just declines to
+    collapse them, so a flipped bit names the stripe it landed in and
+    recovery can re-execute exactly those rows.  Exact by linearity, same
+    argument as the per-graph segmentation; padding stripes (all-zero
+    tiles) compare 0 = 0 and can never flag.  Shared by the two-pass
+    (``spmm_abft*``) and single-pass (``gcn_fused*``) wrappers."""
+    nbm = stripe_sums.shape[0]
+    pred = extra[:, 0].reshape(nbm, -1).sum(axis=1)
+    return Check(predicted=pred, actual=stripe_sums[:, 0],
+                 granularity="stripe")
+
+
 def spmm_abft(bell: BlockEll, x: jax.Array, xr: Optional[jax.Array] = None,
               *, block_g: int = 128, interpret: bool = False,
+              granularity: str = "layer",
               _staged: Optional[Tuple[jax.Array, jax.Array]] = None
               ) -> Tuple[jax.Array, Check]:
     """out = S @ X with the fused ABFT check computed in the same pass.
@@ -70,6 +87,9 @@ def spmm_abft(bell: BlockEll, x: jax.Array, xr: Optional[jax.Array] = None,
     check of this multiply), or H·w_r threaded from the combination matmul
     for the full GCN-ABFT chain (eq. 4) — then Check.predicted equals
     s_c H w_r without s_c ever being applied online.
+    ``granularity="stripe"`` keeps the kernel's per-row-stripe partials as
+    individual corners ([n_block_rows] fields) instead of collapsing to one
+    scalar; ``"layer"`` (default) is the paper's single corner.
     ``_staged`` lets a long-lived caller (the engine's block_ell backend)
     reuse already-staged (block_cols, values) device arrays.
     Returns (out [n, g], Check(predicted=Σ S·xr, actual=Σ out)).
@@ -80,6 +100,9 @@ def spmm_abft(bell: BlockEll, x: jax.Array, xr: Optional[jax.Array] = None,
     xp, xrp = prepare_operands(bell, x, xr, block_g)
     out, stripe_sums, extra = spmm_abft_kernel(cols, vals, xp, xrp,
                                                interpret=interpret)
+    if granularity == "stripe":
+        return trim_output(bell, out, g), stripe_check_corners(stripe_sums,
+                                                               extra)
     return trim_output(bell, out, g), Check(predicted=extra[:n, 0].sum(),
                                             actual=stripe_sums.sum())
 
@@ -114,13 +137,13 @@ def packed_check_corners(stripe_sums: jax.Array, extra: jax.Array,
     actual = jax.ops.segment_sum(stripe_sums[:, 0], segments,
                                  num_segments=num_segments + 1,
                                  indices_are_sorted=True)[:num_segments]
-    return Check(predicted=pred, actual=actual)
+    return Check(predicted=pred, actual=actual, granularity="graph")
 
 
 def spmm_abft_packed(cols: jax.Array, vals: jax.Array, x: jax.Array,
                      xr: Optional[jax.Array], segments: jax.Array,
                      *, num_segments: int, block_g: int = 128,
-                     interpret: bool = False
+                     interpret: bool = False, granularity: str = "graph"
                      ) -> Tuple[jax.Array, Optional[Check]]:
     """Block-diagonal packed SpMM with *per-graph* fused check corners.
 
@@ -139,6 +162,9 @@ def spmm_abft_packed(cols: jax.Array, vals: jax.Array, x: jax.Array,
         pred[g]   = Σ_{rows of g} (S x_r)_row
 
     so a flipped bit in one packed graph perturbs only that graph's corner.
+    ``granularity="stripe"`` refines further: the per-stripe partials stay
+    un-segmented ([n_block_rows] corners), so the fault names the exact
+    stripe and a surgical retry can re-execute only those rows.
     Everything here is shape-static, so the whole call jits with
     ``cols``/``vals``/``segments`` as traced per-batch arguments — no
     recompile across batches of the same packed shape.
@@ -157,6 +183,8 @@ def spmm_abft_packed(cols: jax.Array, vals: jax.Array, x: jax.Array,
     out = out[:, :g]
     if not want_check:
         return out, None
+    if granularity == "stripe":
+        return out, stripe_check_corners(stripe_sums, extra)
     return out, packed_check_corners(stripe_sums, extra, segments,
                                      num_segments)
 

@@ -276,6 +276,12 @@ class GraphShardingRules:
         """Checks psum to replicated scalars."""
         return P()
 
+    def stripe_report_spec(self) -> P:
+        """Per-stripe check corners (granularity='stripe'): each shard's
+        [nbm_local] partials stay on the stripe axis and concatenate into
+        the global per-stripe vector instead of psum-collapsing."""
+        return P(self.axis)
+
     def block_ell_shardings(self) -> Tuple[NamedSharding, NamedSharding]:
         """(cols, values) NamedShardings for device_put staging."""
         return (NamedSharding(self.mesh, self.stripe_spec()),

@@ -14,13 +14,19 @@ Variable-size graphs arrive as a stream and are batched one of two ways:
 Both paths run under ``ABFTGuard.run_step_graphs``: the step emits a
 per-graph verdict vector, so a flagged batch retries *only the flagged
 graphs* (a small re-batch) instead of replaying the whole bucket; a
-persistently flagged step falls back to restore->replay->verify.  Per-layer
-``w_r`` is folded once at weight-load time (``engine.fold_w_r``), not
-recomputed per step.  Reports graphs/sec over the sustained phase plus the
-stream-order per-graph verdicts.
+persistently flagged step falls back to restore->replay->verify.  With
+``--check-granularity stripe`` (block_ell backend) the packed epilogue
+keeps its per-row-stripe corners and the guard gains the surgical tier:
+a flagged stripe's rows are gathered, re-executed through the fused
+kernel, spliced, and re-verified (``engine.localize``) before any graph is
+re-packed — the retry-escalation ladder is stripe -> graph -> whole-step
+restore.  Per-layer ``w_r`` is folded once at weight-load time
+(``engine.fold_w_r``), not recomputed per step.  Reports graphs/sec over
+the sustained phase plus the stream-order per-graph verdicts.
 
     PYTHONPATH=src python -m repro.launch.serve_gcn --graphs 64 --batch 8 \
-        --backend block_ell --block 32 --abft fused
+        --backend block_ell --block 32 --abft fused \
+        --check-granularity stripe
 """
 from __future__ import annotations
 
@@ -32,7 +38,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.abft import ABFTConfig, per_graph_report, summarize
+from repro.core.abft import ABFTConfig, per_graph_report, \
+    per_stripe_report, summarize
 from repro.core.gcn import init_gcn
 from repro.engine import Graph, GraphBatch, PackedGraphs, fold_w_r, \
     gcn_forward, make_batches, make_packed_batches, pack_graphs, \
@@ -68,7 +75,9 @@ def make_serve_step(params, cfg: ABFTConfig):
 def make_packed_serve_step(params, cfg: ABFTConfig, n_slots: int, *,
                            block_g: int = 128,
                            interpret: Optional[bool] = None,
-                           fused_layer: bool = False):
+                           fused_layer: bool = False,
+                           granularity: str = "graph",
+                           inject=None):
     """Jitted (cols, vals, segments, h0) -> (logits, metrics) packed step.
 
     The packed block-ELL arrays are *arguments*, not baked-in constants, so
@@ -77,6 +86,14 @@ def make_packed_serve_step(params, cfg: ABFTConfig, n_slots: int, *,
     per-graph verdict vector.  ``fused_layer=True`` runs each layer through
     the single-pass gcn_fused kernel (combination + aggregation + check in
     one HBM traversal) instead of the two-pass combination-then-spmm path.
+
+    ``granularity="stripe"`` keeps the per-row-stripe corners: the metrics
+    gain ``abft_stripe_flags`` / ``abft_stripe_max_rel`` ([checks,
+    n_stripes] verdicts, the per-graph vector now segment-reduced from
+    them) and ``abft_h_layers`` (every layer's input activations) — the
+    operands the guard's surgical stripe retry needs.  ``inject`` is the
+    benchmark/CI accumulator fault hook, ``(layer, stripe, slot, delta)``
+    threaded to the fused kernel (requires ``fused_layer=True``).
     """
     interpret = (jax.default_backend() != "tpu" if interpret is None
                  else interpret)
@@ -86,16 +103,27 @@ def make_packed_serve_step(params, cfg: ABFTConfig, n_slots: int, *,
         bk = BlockEllBackend.from_staged(cols, vals, segments, n_slots, cfg,
                                          block_g=block_g,
                                          interpret=interpret,
-                                         fused_layer=fused_layer)
-        logits, checks = gcn_forward(params, Graph(s=None, h0=h0), cfg,
-                                     backend=bk)
+                                         fused_layer=fused_layer,
+                                         granularity=granularity,
+                                         inject=inject)
+        logits, checks, h_layers = gcn_forward(
+            params, Graph(s=None, h0=h0), cfg, backend=bk,
+            return_intermediates=True)
         report = summarize(checks, cfg)
-        gflags, grel = per_graph_report(checks, cfg, n_slots)
-        return logits, {"abft_flag": report.flag,
-                        "abft_max_rel": report.max_rel,
-                        "abft_n_checks": report.n_checks,
-                        "abft_graph_flags": gflags,
-                        "abft_graph_max_rel": grel}
+        metrics = {"abft_flag": report.flag,
+                   "abft_max_rel": report.max_rel,
+                   "abft_n_checks": report.n_checks}
+        if granularity == "stripe":
+            gflags, grel = per_graph_report(checks, cfg, n_slots,
+                                            segments=segments)
+            sflags, srel = per_stripe_report(checks, cfg, vals.shape[0])
+            metrics.update(abft_stripe_flags=sflags,
+                           abft_stripe_max_rel=srel,
+                           abft_h_layers=h_layers)
+        else:
+            gflags, grel = per_graph_report(checks, cfg, n_slots)
+        metrics.update(abft_graph_flags=gflags, abft_graph_max_rel=grel)
+        return logits, metrics
     return step
 
 
@@ -108,10 +136,11 @@ class _PackedRunner:
     """Per-shape jitted packed steps + the per-graph retry closure."""
 
     def __init__(self, params, cfg: ABFTConfig, block_g: int,
-                 fused_layer: bool = False):
+                 fused_layer: bool = False, granularity: str = "graph"):
         self.params, self.cfg = params, cfg
         self.block_g = block_g
         self.fused_layer = fused_layer
+        self.granularity = granularity
         self._steps = {}
 
     def step_for(self, pb: PackedGraphs):
@@ -121,7 +150,7 @@ class _PackedRunner:
                 self._warn_fallbacks(pb)
             self._steps[key] = make_packed_serve_step(
                 self.params, self.cfg, pb.n_slots, block_g=self.block_g,
-                fused_layer=self.fused_layer)
+                fused_layer=self.fused_layer, granularity=self.granularity)
         return self._steps[key]
 
     def _warn_fallbacks(self, pb: PackedGraphs):
@@ -154,6 +183,10 @@ class _PackedRunner:
                               stripe_multiple=pb.stripe_multiple,
                               width_multiple=pb.width_multiple)
             sub_logits, sub_metrics = self.step_for(sub)(*_packed_args(sub))
+            n_layers = len(self.params["layers"])
+            sub_metrics = {**sub_metrics,
+                           "abft_rows_recomputed":
+                               int(sub.bell.padded_rows) * n_layers}
             out = np.asarray(out).copy()
             for k, gi in enumerate(idx):
                 o, n = pb.row_offsets[gi], pb.n_nodes[gi]
@@ -161,6 +194,18 @@ class _PackedRunner:
                 out[o:o + n] = np.asarray(sub_logits)[so:so + sn]
             return out, sub_metrics
         return retry
+
+    def stripe_retry_fn(self, pb: PackedGraphs):
+        """Surgical tier: gather the flagged stripes' tile rows, re-execute
+        them through the fused kernel against the SAME packed operands,
+        splice the rows back, and re-verify — no re-packing, no whole-graph
+        replay (``engine.localize.surgical_stripe_retry``)."""
+        from repro.engine.localize import surgical_stripe_retry
+
+        def sretry(out, metrics):
+            return surgical_stripe_retry(pb, self.params, self.cfg, out,
+                                         metrics, block_g=self.block_g)
+        return sretry
 
 
 def _dense_retry_fn(step, b: GraphBatch):
@@ -177,7 +222,8 @@ def _dense_retry_fn(step, b: GraphBatch):
 
 def serve(batches: Sequence[Batch], params, cfg: ABFTConfig,
           guard: Optional[ABFTGuard] = None, verbose: bool = True, *,
-          block_g: int = 128, fused_layer: bool = False):
+          block_g: int = 128, fused_layer: bool = False,
+          granularity: str = "graph"):
     """Run every batch through the guarded jitted step; returns stats.
 
     Dispatches per batch type (GraphBatch -> dense, PackedGraphs -> packed
@@ -185,18 +231,31 @@ def serve(batches: Sequence[Batch], params, cfg: ABFTConfig,
     via each batch's ``indices``.  Retries re-pack at each batch's own
     block size (``PackedGraphs.block``).  ``fused_layer=True`` selects the
     single-pass gcn_fused kernel on the packed path (dense path unaffected).
+    ``granularity="stripe"`` (packed batches only) keeps per-stripe check
+    corners and arms the guard's surgical retry tier — the escalation
+    ladder becomes stripe -> graph -> whole-step restore.
     """
+    if granularity not in ("graph", "stripe"):
+        raise ValueError(f"serve granularity {granularity!r} not in "
+                         f"('graph', 'stripe')")
     guard = guard if guard is not None else ABFTGuard()
     params = fold_w_r(params, cfg)
     dense_step = None
-    packed = _PackedRunner(params, cfg, block_g, fused_layer)
+    packed = _PackedRunner(params, cfg, block_g, fused_layer, granularity)
 
     def run_one(b: Batch, warm: bool):
         nonlocal dense_step
+        stripe_retry = None
         if isinstance(b, PackedGraphs):
             step, args = packed.step_for(b), _packed_args(b)
             retry = packed.retry_fn(b)
+            if granularity == "stripe":
+                stripe_retry = packed.stripe_retry_fn(b)
         else:
+            if granularity != "graph":
+                raise ValueError("dense batches have no row-stripes; "
+                                 "--check-granularity stripe needs "
+                                 "--backend block_ell")
             if dense_step is None:
                 dense_step = make_serve_step(params, cfg)
             step = dense_step
@@ -205,7 +264,8 @@ def serve(batches: Sequence[Batch], params, cfg: ABFTConfig,
         if warm:
             out, metrics = step(*args)
         else:
-            out, metrics = guard.run_step_graphs(step, retry, *args)
+            out, metrics = guard.run_step_graphs(
+                step, retry, *args, stripe_retry_fn=stripe_retry)
         jax.block_until_ready(metrics["abft_graph_flags"])
         return out, metrics
 
@@ -239,17 +299,23 @@ def serve(batches: Sequence[Batch], params, cfg: ABFTConfig,
                                      for b in batches) else "dense"
     if fused_layer and kind != "dense":
         kind += " (fused-layer)"
+    if granularity == "stripe":
+        kind += " [stripe corners]"
     if verbose:
         print(f"served {n_graphs} graphs in {len(batches)} {kind} batches "
               f"({len(shapes)} shapes) in {dt*1e3:.1f} ms "
               f"-> {gps:.1f} graphs/sec")
         print(f"guard: steps={guard.steps} flags={guard.flags} "
               f"retries={guard.retries} graph_retries={guard.graph_retries} "
+              f"stripe_retries={guard.stripe_retries} "
+              f"recomputed_rows={guard.recomputed_rows} "
               f"flag_rate={guard.flag_rate:.4f} "
               f"evict={guard.should_evict()}")
     return {"graphs": n_graphs, "batches": len(batches), "seconds": dt,
             "graphs_per_sec": gps, "flags": guard.flags,
             "graph_retries": guard.graph_retries,
+            "stripe_retries": guard.stripe_retries,
+            "recomputed_rows": guard.recomputed_rows,
             "graph_flags": graph_flags, "graph_max_rel": graph_max_rel}
 
 
@@ -277,8 +343,16 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
                     help="run each packed layer through the single-pass "
                          "gcn_fused kernel (combination + aggregation + "
                          "check in one HBM traversal; block_ell backend)")
+    ap.add_argument("--check-granularity", default="graph",
+                    choices=["graph", "stripe"],
+                    help="fault attribution: per packed graph (default) or "
+                         "per row-stripe — stripe arms the guard's "
+                         "surgical retry tier (block_ell backend)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.check_granularity == "stripe" and args.backend != "block_ell":
+        ap.error("--check-granularity stripe needs --backend block_ell "
+                 "(dense batches have no row-stripes)")
 
     buckets = [int(b) for b in args.buckets.split(",")]
     n_lo, n_hi = (int(v) for v in args.nodes.split(","))
@@ -297,7 +371,8 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
         batches = make_batches(stream, args.batch, buckets)
     params = init_gcn(jax.random.PRNGKey(args.seed),
                       (args.feat, args.hidden, args.classes))
-    return serve(batches, params, cfg, fused_layer=args.fused_layer)
+    return serve(batches, params, cfg, fused_layer=args.fused_layer,
+                 granularity=args.check_granularity)
 
 
 if __name__ == "__main__":

@@ -22,6 +22,16 @@ epilogue or the dense batched checks), and only the flagged graphs are
 retried — a bit flip in one packed graph costs one small re-pack, not a
 whole-bucket replay.
 
+At stripe granularity the ladder gains its cheapest rung: when the step
+also emits per-stripe verdicts (``abft_stripe_flags``) and a
+``stripe_retry_fn`` is given, the guard first attempts a *surgical* repair
+— re-execute only the flagged stripes' rows, splice, re-verify
+(``engine.localize.surgical_stripe_retry``) — and only escalates to the
+per-graph retry, and then to restore->replay, when the repair cannot be
+verified.  ``guard.retries`` counts re-executions *performed* on every
+tier (never mere intents); ``stripe_retries`` / ``recomputed_rows`` track
+the surgical tier's row economics.
+
 Because the checked step is pure (params, batch) -> outputs, the retry is
 exact replay; no optimizer state was committed for a flagged step (the guard
 runs *before* state adoption).  ``restore_fn`` either rewinds external state
@@ -60,8 +70,10 @@ class ABFTGuard:
         self.restore_fn = restore_fn
         self.steps = 0
         self.flags = 0           # lifetime count of flagged steps
-        self.retries = 0
+        self.retries = 0         # re-executions PERFORMED (any tier)
         self.graph_retries = 0   # individual graphs re-run by partial retry
+        self.stripe_retries = 0  # individual stripes re-run surgically
+        self.recomputed_rows = 0  # rows re-executed by partial retries
         self.restores = 0
         # per-step flagged? outcomes, newest last; drives the rolling rate —
         # a chip that degraded an hour in must look bad *now*, not diluted
@@ -79,6 +91,11 @@ class ABFTGuard:
         metrics = None
         for attempt in range(self.cfg.max_retries + 1):
             out, metrics = step_fn(*args)
+            if attempt:
+                # counted AFTER the call returns: ``retries`` means
+                # re-executions performed, never intents — the same
+                # convention as run_step_graphs' partial retries
+                self.retries += 1
             flagged = bool(metrics["abft_flag"])
             if not flagged:
                 if attempt:
@@ -88,7 +105,6 @@ class ABFTGuard:
             if not step_flagged:
                 step_flagged = True
                 self.flags += 1
-            self.retries += int(attempt < self.cfg.max_retries)
             log.error("ABFT flag on step %d (attempt %d): max_rel=%.3e",
                       self.steps, attempt, float(metrics.get("abft_max_rel", -1)))
         # persistent failure: roll back, replay, and re-verify
@@ -97,7 +113,9 @@ class ABFTGuard:
 
     def run_step_graphs(self, step_fn: Callable[..., Tuple[Any, Any]],
                         retry_fn: Callable[[Any, np.ndarray],
-                                           Tuple[Any, Any]], *args):
+                                           Tuple[Any, Any]], *args,
+                        stripe_retry_fn: Optional[
+                            Callable[[Any, Any], Tuple[Any, Any]]] = None):
         """Per-graph guarded batch step for multi-graph serving.
 
         ``step_fn(*args)`` returns (out, metrics) where
@@ -108,9 +126,21 @@ class ABFTGuard:
         entries of ``sub_metrics`` aligned to ``flagged_idx`` — linearity of
         the checksum makes the per-graph decomposition exact, so the
         untouched graphs' verified results are kept and the returned metrics
-        reflect the *adopted* executions, not the failed attempts.  Bounded
-        like :meth:`run_step`; persistently flagged graphs fall back to the
+        reflect the *adopted* executions, not the failed attempts.  The
+        retry's returned vectors are validated against ``flagged_idx``:
+        a full-batch-aligned vector would silently misattribute verdicts to
+        the wrong graphs, so a shape mismatch raises.  Bounded like
+        :meth:`run_step`; persistently flagged graphs fall back to the
         restore->replay->verify path for the whole step.
+
+        ``stripe_retry_fn(out, metrics)`` is the optional surgical tier,
+        tried FIRST when the step carries per-stripe verdicts
+        (``metrics['abft_stripe_flags']``, granularity="stripe"): it
+        re-executes only the flagged stripes' rows and returns
+        (patched_out, sub_metrics) with a FULL-batch
+        ``sub_metrics['abft_graph_flags']`` vector (all-False on verified
+        success) plus ``abft_rows_recomputed`` / ``abft_stripes_recomputed``
+        accounting.  An unverified repair escalates to the per-graph tier.
         """
         self.steps += 1
         out, metrics = step_fn(*args)
@@ -123,6 +153,55 @@ class ABFTGuard:
         if "abft_graph_max_rel" in metrics:
             grel = np.array(metrics["abft_graph_max_rel"],
                             dtype=np.float32).copy()
+        # --- tier 0: stripe-surgical repair ------------------------------
+        sflags = np.asarray(metrics.get("abft_stripe_flags", False),
+                            dtype=bool)
+        if stripe_retry_fn is not None and sflags.any():
+            log.error("ABFT: step %d: %d stripe corner(s) flagged; "
+                      "attempting surgical repair", self.steps,
+                      int(sflags.sum()))
+            out2, sub = stripe_retry_fn(out, metrics)
+            performed = int(sub.get("abft_stripes_recomputed", 0))
+            # retries counts re-executions PERFORMED: an escalation that
+            # bailed before touching any stripe re-executed nothing
+            self.retries += int(performed > 0)
+            self.stripe_retries += performed
+            self.recomputed_rows += int(sub.get("abft_rows_recomputed", 0))
+            new_flags = np.asarray(sub["abft_graph_flags"], dtype=bool)
+            if new_flags.shape != flags.shape:
+                raise ValueError(
+                    f"stripe_retry_fn returned abft_graph_flags of shape "
+                    f"{new_flags.shape}; the surgical tier's contract is "
+                    f"the FULL batch vector {flags.shape}")
+            if not new_flags.any():
+                log.warning("ABFT: surgical stripe repair adopted")
+                self._recent.append(True)
+                metrics = {**metrics, "abft_flag": False,
+                           "abft_graph_flags": new_flags,
+                           "abft_stripe_flags": np.zeros_like(sflags)}
+                # adopted metrics only: the per-stripe divergences belong
+                # to the discarded execution and are not reconstructed by
+                # the repair — drop them rather than report fault-magnitude
+                # values under a clean flag
+                metrics.pop("abft_stripe_max_rel", None)
+                if grel is not None and "abft_graph_max_rel" in sub:
+                    sub_rel = np.asarray(sub["abft_graph_max_rel"],
+                                         np.float32)
+                    if sub_rel.shape != grel.shape:
+                        raise ValueError(
+                            f"stripe_retry_fn returned abft_graph_max_rel "
+                            f"of shape {sub_rel.shape}; expected the full "
+                            f"batch vector {grel.shape}")
+                    # replace only the repaired graphs' divergences; the
+                    # untouched graphs' adopted values stand
+                    grel = np.where(flags, sub_rel, grel)
+                    metrics["abft_graph_max_rel"] = grel
+                    metrics["abft_max_rel"] = grel.max(initial=0.0)
+                else:
+                    metrics.pop("abft_max_rel", None)
+                return out2, metrics
+            out, flags = out2, new_flags.copy()
+        # --- tier 1: per-graph retry -------------------------------------
         for attempt in range(1, self.cfg.max_retries + 1):
             idx = np.nonzero(flags)[0]
             log.error("ABFT: step %d: %d/%d graphs flagged; retrying them "
@@ -131,16 +210,33 @@ class ABFTGuard:
             out, sub = retry_fn(out, idx)
             self.retries += 1
             self.graph_retries += len(idx)
-            flags[idx] = np.array(sub["abft_graph_flags"],
-                                  dtype=bool)[:len(idx)]
+            if "abft_rows_recomputed" in sub:
+                self.recomputed_rows += int(sub["abft_rows_recomputed"])
+            sub_flags = np.asarray(sub["abft_graph_flags"], dtype=bool)
+            if sub_flags.shape != (len(idx),):
+                raise ValueError(
+                    f"retry_fn returned abft_graph_flags of shape "
+                    f"{sub_flags.shape}; expected ({len(idx)},) aligned to "
+                    f"flagged_idx — a full-batch vector would be silently "
+                    f"misattributed to the wrong graphs")
+            flags[idx] = sub_flags
             if grel is not None and "abft_graph_max_rel" in sub:
-                grel[idx] = np.array(sub["abft_graph_max_rel"],
-                                     dtype=np.float32)[:len(idx)]
+                sub_rel = np.asarray(sub["abft_graph_max_rel"],
+                                     dtype=np.float32)
+                if sub_rel.shape != (len(idx),):
+                    raise ValueError(
+                        f"retry_fn returned abft_graph_max_rel of shape "
+                        f"{sub_rel.shape}; expected ({len(idx)},) aligned "
+                        f"to flagged_idx")
+                grel[idx] = sub_rel
             if not flags.any():
                 log.warning("ABFT: per-graph retry %d succeeded", attempt)
                 self._recent.append(True)
                 metrics = {**metrics, "abft_flag": False,
                            "abft_graph_flags": flags}
+                if sflags.any():
+                    metrics["abft_stripe_flags"] = np.zeros_like(sflags)
+                    metrics.pop("abft_stripe_max_rel", None)
                 # adopted metrics only: the failed attempts' divergences
                 # were replaced along with their outputs — when we cannot
                 # reconstruct max_rel per graph, drop it rather than return
