@@ -13,8 +13,10 @@ re-executed rows (row x layer re-executions):
     stripe's rows at the flagged layer, plus only the stripes whose cols
     table references the repaired rows downstream.  The spliced output is
     asserted bit-for-bit equal to a clean run.
-  * **graph**   — PR 3's per-graph retry: every padded row of the flagged
-    graph, at every layer (the sub-pack re-runs the whole forward).
+  * **graph**   — PR 3's per-graph retry: every LOGICAL row of the flagged
+    graph (its n_nodes, not its padded stripe rows), at every layer — the
+    same basis ``PackedRunner.retry_fn`` reports in
+    ``abft_rows_recomputed``, asserted equal here once per mix.
   * **step**    — whole-step replay (restore tier): every padded row of
     the batch, at every layer.
 
@@ -49,7 +51,8 @@ def run_mix(name: str, nodes, block: int, *, graphs: int, feat: int,
     from repro.core.gcn import init_gcn
     from repro.engine import fold_w_r, pack_graphs, synth_graph_stream
     from repro.engine.localize import surgical_stripe_retry
-    from repro.launch.serve_gcn import _packed_args, make_packed_serve_step
+    from repro.engine.streaming import (PackedRunner, make_packed_serve_step,
+                                        packed_step_args as _packed_args)
 
     cfg = ABFTConfig(mode="fused", threshold=1e-3, relative=True)
     stream = synth_graph_stream(graphs, n_lo=nodes[0], n_hi=nodes[1],
@@ -75,6 +78,18 @@ def run_mix(name: str, nodes, block: int, *, graphs: int, feat: int,
     assert not bool(np.asarray(m_clean["abft_graph_flags"]).any()), \
         "clean packed run flagged — raise the threshold or reseed"
     logits_clean = np.asarray(logits_clean)
+
+    # same-basis guard: the graph-tier rows this benchmark charges must be
+    # the rows the engine's own retry accounting reports, or the
+    # stripe-vs-graph fractions silently compare different units
+    runner = PackedRunner(params, cfg, block, fused_layer=True,
+                          granularity="stripe")
+    _, m_retry = runner.retry_fn(pb)(logits_clean, [0])
+    assert int(m_retry["abft_rows_recomputed"]) == \
+        int(pb.n_nodes[0]) * n_layers, \
+        (name, int(m_retry["abft_rows_recomputed"]),
+         int(pb.n_nodes[0]) * n_layers,
+         "engine retry accounting is not on the logical-rows basis")
 
     real_stripes = [s for s in range(nbm) if stripe_graph[s] < pb.n_slots
                     and stripes_of[int(stripe_graph[s])] > 0][::stride]
@@ -103,7 +118,7 @@ def run_mix(name: str, nodes, block: int, *, graphs: int, feat: int,
                 assert np.array_equal(repaired, logits_clean), \
                     (name, layer, stripe, slot, "splice not bit-exact")
                 rows["stripe"] += int(sub["abft_rows_recomputed"])
-                rows["graph"] += stripes_of[victim] * bm * n_layers
+                rows["graph"] += int(pb.n_nodes[victim]) * n_layers
                 rows["step"] += step_rows_once
                 n_inj += 1
     frac = {k: v / max(rows["step"], 1) for k, v in rows.items()}

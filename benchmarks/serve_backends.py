@@ -12,7 +12,10 @@ numbers are pessimistic; the dense column and the per-mix *shape counts*
 
 Writes machine-readable results to ``BENCH_serve.json`` (``--json`` to
 relocate, ``--json ""`` to disable) so the serving-perf trajectory is
-tracked across PRs.
+tracked across PRs.  Interpret-mode runs are stamped ``"interpret": true``
+and ``"authoritative": false`` in the JSON and warned about loudly on
+stdout; ``--require-compiled`` refuses to run at all off-accelerator
+(exits non-zero), for lanes that must never ingest interpret numbers.
 
     PYTHONPATH=src python -m benchmarks.serve_backends --graphs 32
 """
@@ -20,6 +23,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 from typing import List, Optional, Sequence
 
 MIXES = (
@@ -73,10 +77,25 @@ def main(argv: Optional[Sequence[str]] = None) -> List[dict]:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default="BENCH_serve.json",
                     help="write machine-readable results here ('' disables)")
+    ap.add_argument("--require-compiled", action="store_true",
+                    help="exit non-zero when the kernels would run in "
+                         "interpret mode (non-authoritative numbers)")
     args = ap.parse_args(argv)
 
+    interpret = jax.default_backend() != "tpu"
+    if args.require_compiled and interpret:
+        print(f"FAIL: --require-compiled but backend is "
+              f"{jax.default_backend()!r} — Pallas kernels would run in "
+              f"interpret mode and the numbers would not be authoritative",
+              file=sys.stderr)
+        sys.exit(1)
     print(f"=== serve_backends: {args.graphs} graphs/mix, batch "
-          f"{args.batch}, abft={args.abft} ({jax.default_backend()}) ===")
+          f"{args.batch}, abft={args.abft} ({jax.default_backend()}"
+          f"{', interpret' if interpret else ''}) ===")
+    if interpret:
+        print("WARNING: interpret-mode kernels (no real accelerator) — "
+              "packed wall-clock numbers are NOT authoritative; use the "
+              "dense column and shape counts, or re-run on TPU")
     print(f"{'mix':>8} {'nodes':>10} {'dense g/s':>12} {'packed g/s':>12}")
     rows = []
     for name, nodes, buckets, block in MIXES:
@@ -89,6 +108,8 @@ def main(argv: Optional[Sequence[str]] = None) -> List[dict]:
     if args.json:
         rec = {"bench": "serve_backends",
                "device_backend": jax.default_backend(),
+               "interpret": interpret,
+               "authoritative": not interpret,
                "config": {"graphs": args.graphs, "batch": args.batch,
                           "feat": args.feat, "hidden": args.hidden,
                           "classes": args.classes, "abft": args.abft,

@@ -5,6 +5,8 @@ Public surface:
   backends  — AggregationBackend protocol + dense/bcoo/block_ell registry
   sharded   — Partition + shard_map'd stripe-sharded block-ELL aggregation
   batching  — bucketed padding of variable-size graphs for batched serving
+  streaming — continuous-traffic serving: canonical rungs, online packing,
+              double-buffered guarded dispatch, latency SLOs, backpressure
 """
 from .api import (  # noqa: F401
     Graph,
@@ -28,6 +30,7 @@ from .localize import (  # noqa: F401
 from .batching import (  # noqa: F401
     GraphBatch,
     PackedGraphs,
+    graph_pack_stats,
     make_batches,
     make_packed_batches,
     pack_graphs,
@@ -40,4 +43,12 @@ from .sharded import (  # noqa: F401
     Partition,
     sharded_gcn_fused,
     sharded_spmm_abft,
+)
+from .streaming import (  # noqa: F401
+    PackedRunner,
+    RequestResult,
+    Rung,
+    RungTable,
+    StreamingEngine,
+    plan_rungs,
 )

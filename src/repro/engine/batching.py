@@ -37,6 +37,8 @@ from repro.kernels.spmm_abft.layout import (
     BlockEll,
     dense_to_block_ell,
     pad_block_rows,
+    pad_block_rows_to,
+    pad_width,
     stack_block_ell,
 )
 
@@ -171,9 +173,27 @@ def make_batches(graphs: Iterable[Tuple[np.ndarray, np.ndarray]],
     return out
 
 
+def graph_pack_stats(s: np.ndarray, block: int) -> Tuple[int, int]:
+    """(stripe count, block-ELL width) one graph contributes to a packed
+    batch, computed from the nonzero pattern without building the tile
+    table — the online packer calls this per request to fit a capacity
+    rung, so it must be cheap."""
+    s = np.asarray(s)
+    n = s.shape[0]
+    stripes = -(-n // block)
+    r, c = np.nonzero(s)
+    if r.size == 0:
+        return stripes, 1
+    tiles = np.unique(np.stack([r // block, c // block], axis=1), axis=0)
+    width = int(np.bincount(tiles[:, 0], minlength=stripes).max())
+    return stripes, max(width, 1)
+
+
 def pack_graphs(graphs: Sequence[Tuple[np.ndarray, np.ndarray]],
                 *, block: int = 32, n_slots: Optional[int] = None,
                 stripe_multiple: int = 1, width_multiple: int = 1,
+                stripe_cap: Optional[int] = None,
+                width_cap: Optional[int] = None,
                 indices: Optional[Sequence[int]] = None) -> PackedGraphs:
     """Compose (S, H0) pairs into one block-diagonal packed block-ELL batch.
 
@@ -185,6 +205,13 @@ def pack_graphs(graphs: Sequence[Tuple[np.ndarray, np.ndarray]],
     and ``stripe_multiple``/``width_multiple`` quantize the stripe count
     (via ``pad_block_rows``) and tile width, so ragged traffic maps to few
     distinct jit shapes.
+
+    ``stripe_cap``/``width_cap`` go further and pin the stripe count and
+    ELL width to EXACT values — the canonical-rung contract of the
+    streaming engine: every batch packed against the same rung presents
+    one jit shape no matter which graphs landed in it.  Raises when the
+    contents genuinely exceed a cap (the engine checks fit *before*
+    admitting a graph to a rung's open bin).
     """
     if not graphs:
         raise ValueError("pack_graphs needs at least one graph")
@@ -213,6 +240,10 @@ def pack_graphs(graphs: Sequence[Tuple[np.ndarray, np.ndarray]],
     bell = stack_block_ell(bells, offsets, shape=(total_rows, total_rows),
                            width_multiple=width_multiple)
     bell = pad_block_rows(bell, stripe_multiple)
+    if stripe_cap is not None:
+        bell = pad_block_rows_to(bell, stripe_cap)
+    if width_cap is not None:
+        bell = pad_width(bell, width_cap)
     stripe_graph = np.asarray(stripe_graph, np.int32)
     if bell.n_block_rows > stripe_graph.shape[0]:
         # pad stripes land in the overflow segment (id n_slots), which the

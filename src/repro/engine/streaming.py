@@ -1,0 +1,690 @@
+"""Streaming GCN serving: a bounded request queue, online FFD packing into
+canonical rung shapes, and double-buffered guarded dispatch.
+
+The paper's point is *online* error checking, and a server that
+materializes its whole stream before packing is not online.  This module
+serves continuous traffic:
+
+* **Canonical rungs** (:func:`plan_rungs` / :class:`RungTable`) — a small
+  fixed set of packed shapes (stripe capacity x ELL width x slot count)
+  chosen from a traffic profile.  Every batch is padded to its rung's
+  EXACT shape (``pack_graphs(stripe_cap=, width_cap=)``), so the number of
+  jit compiles is bounded by the rung table, not by whatever graph sizes
+  happen to arrive together.
+* **Online first-fit packing** (:class:`StreamingEngine.submit`) — each
+  request is fitted to the smallest rung whose capacity admits it and
+  appended to that rung's open bin; a bin seals (dispatches) when its
+  slots fill or the next request would overflow the stripe capacity.
+  This is the incremental form of ``engine.batching.schedule_packs``:
+  same capacity logic, applied per arrival instead of over a closed list.
+* **Double-buffered dispatch** — sealing a bin packs it on the host while
+  the previous batch is still executing on the device (JAX async
+  dispatch); only then is the previous batch *adjudicated*
+  (``ABFTGuard.adjudicate`` — the first host sync) and the new one
+  dispatched.  Pack and execute overlap; the guard ladder (stripe ->
+  graph -> restore) is unchanged.
+* **Latency SLOs** — every request records enqueue, dispatch, and verdict
+  times; :meth:`StreamingEngine.stats` reports p50/p99 enqueue->verdict
+  latency per request, not just graphs/sec.
+* **Flush-on-deadline** — an open bin whose oldest request has waited
+  ``flush_deadline`` seconds is sealed partial, so a trickle stream is
+  never starved behind a bin that will not fill.
+* **Backpressure** — ``queue_capacity`` bounds the requests parked in
+  open bins; a submit beyond it returns an explicit ``rejected`` verdict
+  immediately.  The server never grows an unbounded buffer.
+* **Oversized requests degrade gracefully** — a graph exceeding every
+  rung (stripes or ELL width) is routed to a dedicated singleton shape
+  (power-of-two quantized, so even pathological traffic compiles O(log)
+  shapes) or, under ``oversize_policy="reject"``, answered with a
+  per-request rejection verdict.  It never kills the stream.
+
+The closed-batch driver (``launch/serve_gcn.py``) is a thin client of the
+same machinery: :class:`PackedRunner` and the jitted step builders below
+are shared, so benchmarks and the streaming server run identical kernels,
+checks, and retry ladders.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.abft import ABFTConfig, per_graph_report, \
+    per_stripe_report, summarize
+from repro.engine.api import Graph, fold_w_r, gcn_forward
+from repro.engine.backends import BlockEllBackend
+from repro.engine.batching import GraphBatch, PackedGraphs, \
+    graph_pack_stats, pack_graphs
+from repro.runtime import ABFTGuard
+
+
+# ---------------------------------------------------------------------------
+# jitted serve steps (shared by closed-batch serve_gcn and the stream engine)
+# ---------------------------------------------------------------------------
+
+def make_serve_step(params, cfg: ABFTConfig):
+    """Jitted (s, h0) -> (logits, metrics) batched dense engine step.
+
+    One compile per distinct (batch, bucket) shape; the dense backend
+    broadcasts over the leading batch axis, so the batch contributes
+    batched scalar checks — reduced into one replicated report AND kept
+    per-graph for the guard's partial retry.
+    """
+    @jax.jit
+    def step(s, h0):
+        logits, checks = gcn_forward(params, Graph(s=s, h0=h0), cfg,
+                                     backend="dense")
+        report = summarize(checks, cfg)
+        gflags, grel = per_graph_report(checks, cfg, s.shape[0])
+        return logits, {"abft_flag": report.flag,
+                        "abft_max_rel": report.max_rel,
+                        "abft_n_checks": report.n_checks,
+                        "abft_graph_flags": gflags,
+                        "abft_graph_max_rel": grel}
+    return step
+
+
+def make_packed_serve_step(params, cfg: ABFTConfig, n_slots: int, *,
+                           block_g: int = 128,
+                           interpret: Optional[bool] = None,
+                           fused_layer: bool = False,
+                           granularity: str = "graph",
+                           inject=None):
+    """Jitted (cols, vals, segments, h0) -> (logits, metrics) packed step.
+
+    The packed block-ELL arrays are *arguments*, not baked-in constants, so
+    every batch of the same packed shape shares one compile; the segmented
+    epilogue's per-graph corners feed both the replicated report and the
+    per-graph verdict vector.  ``fused_layer=True`` runs each layer through
+    the single-pass gcn_fused kernel (combination + aggregation + check in
+    one HBM traversal) instead of the two-pass combination-then-spmm path.
+
+    ``granularity="stripe"`` keeps the per-row-stripe corners: the metrics
+    gain ``abft_stripe_flags`` / ``abft_stripe_max_rel`` ([checks,
+    n_stripes] verdicts, the per-graph vector now segment-reduced from
+    them) and ``abft_h_layers`` (every layer's input activations) — the
+    operands the guard's surgical stripe retry needs.  ``inject`` is the
+    benchmark/CI accumulator fault hook, ``(layer, stripe, slot, delta)``
+    threaded to the fused kernel (requires ``fused_layer=True``).
+    """
+    interpret = (jax.default_backend() != "tpu" if interpret is None
+                 else interpret)
+
+    @jax.jit
+    def step(cols, vals, segments, h0):
+        bk = BlockEllBackend.from_staged(cols, vals, segments, n_slots, cfg,
+                                         block_g=block_g,
+                                         interpret=interpret,
+                                         fused_layer=fused_layer,
+                                         granularity=granularity,
+                                         inject=inject)
+        logits, checks, h_layers = gcn_forward(
+            params, Graph(s=None, h0=h0), cfg, backend=bk,
+            return_intermediates=True)
+        report = summarize(checks, cfg)
+        metrics = {"abft_flag": report.flag,
+                   "abft_max_rel": report.max_rel,
+                   "abft_n_checks": report.n_checks}
+        if granularity == "stripe":
+            gflags, grel = per_graph_report(checks, cfg, n_slots,
+                                            segments=segments)
+            sflags, srel = per_stripe_report(checks, cfg, vals.shape[0])
+            metrics.update(abft_stripe_flags=sflags,
+                           abft_stripe_max_rel=srel,
+                           abft_h_layers=h_layers)
+        else:
+            gflags, grel = per_graph_report(checks, cfg, n_slots)
+        metrics.update(abft_graph_flags=gflags, abft_graph_max_rel=grel)
+        return logits, metrics
+    return step
+
+
+def packed_step_args(pb: PackedGraphs) -> Tuple[jax.Array, ...]:
+    """The jitted packed step's positional operands for one batch."""
+    return (jnp.asarray(pb.bell.block_cols), jnp.asarray(pb.bell.values),
+            jnp.asarray(pb.stripe_graph), jnp.asarray(pb.h0))
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (>= 1) — the retry/singleton shape
+    ladder's quantizer: distinct counts collapse onto O(log) shapes."""
+    return 1 << max(0, int(n - 1).bit_length())
+
+
+class PackedRunner:
+    """Per-shape jitted packed steps + the per-graph retry closure.
+
+    ``_steps`` is the compile cache: one entry per distinct packed shape.
+    Its length IS the jit-compile count the streaming engine's
+    bounded-compile contract is asserted against.
+    """
+
+    def __init__(self, params, cfg: ABFTConfig, block_g: int,
+                 fused_layer: bool = False, granularity: str = "graph"):
+        self.params, self.cfg = params, cfg
+        self.block_g = block_g
+        self.fused_layer = fused_layer
+        self.granularity = granularity
+        self._steps = {}
+
+    @property
+    def compile_count(self) -> int:
+        return len(self._steps)
+
+    def step_for(self, pb: PackedGraphs):
+        key = (pb.bell.values.shape, pb.h0.shape, pb.n_slots)
+        if key not in self._steps:
+            if self.fused_layer:
+                self._warn_fallbacks(pb)
+            self._steps[key] = make_packed_serve_step(
+                self.params, self.cfg, pb.n_slots, block_g=self.block_g,
+                fused_layer=self.fused_layer, granularity=self.granularity)
+        return self._steps[key]
+
+    def _warn_fallbacks(self, pb: PackedGraphs):
+        """The VMEM-budget decision happens at trace time inside the jitted
+        step, where it is invisible to the operator — so surface it eagerly,
+        once per packed shape, from the layer widths we already know."""
+        import warnings
+
+        from repro.kernels.gcn_fused.ops import fused_layer_fits
+
+        bm, bk = pb.bell.values.shape[2:4]
+        wide = [tuple(layer["w"].shape) for layer in self.params["layers"]
+                if not fused_layer_fits(*layer["w"].shape, bm, bk,
+                                        block_g=self.block_g)]
+        if wide:
+            warnings.warn(
+                f"--fused-layer: layer widths {wide} exceed the fused VMEM "
+                f"budget; those layers run the two-pass kernel instead")
+
+    def _retry_shape(self, pb: PackedGraphs, items) -> Dict[str, int]:
+        """Canonical sub-pack shape for a flagged subset: slot count,
+        stripe capacity, and ELL width each rounded up a power-of-two
+        ladder (respecting the parent's quantization multiples), so every
+        flagged-graph count on a flaky host maps onto O(log) shapes that
+        hit the ``_steps`` cache instead of compiling per batch."""
+        sq = max(pb.stripe_multiple, 1)
+        wq = max(pb.width_multiple, 1)
+        stats = [graph_pack_stats(s, pb.block) for s, _ in items]
+        stripes = sum(st for st, _ in stats)
+        width = max(w for _, w in stats)
+        return {"n_slots": next_pow2(len(items)),
+                "stripe_cap": sq * next_pow2(-(-stripes // sq)),
+                "width_cap": wq * next_pow2(-(-width // wq))}
+
+    def pack_retry(self, pb: PackedGraphs, items,
+                   indices: Optional[Sequence[int]] = None) -> PackedGraphs:
+        shape = self._retry_shape(pb, items)
+        return pack_graphs(items, block=pb.block,
+                           stripe_multiple=pb.stripe_multiple,
+                           width_multiple=pb.width_multiple,
+                           indices=indices, **shape)
+
+    def retry_fn(self, pb: PackedGraphs):
+        """retry(out, idx): re-pack ONLY the flagged graphs into a small
+        block-diagonal system (same block size as the parent batch),
+        re-run, and patch their logit rows back — the unflagged graphs'
+        verified rows are untouched.  Sub-packs pad onto the power-of-two
+        retry ladder (slots 1, 2, 4, …; stripes/width likewise), so a
+        flaky chip retrying a different flagged count every batch compiles
+        O(log) shapes total, all shared through the ``_steps`` cache.
+
+        ``abft_rows_recomputed`` counts LOGICAL rows (Σ n_nodes x layers):
+        block/stripe/width quantization padding is shape bookkeeping, not
+        recomputed work, and counting it would skew the stripe-vs-graph
+        economics in BENCH_localization.json."""
+        def retry(out, idx):
+            items = [pb.items[i] for i in idx]
+            sub = self.pack_retry(pb, items)
+            sub_logits, sub_metrics = self.step_for(sub)(
+                *packed_step_args(sub))
+            n_layers = len(self.params["layers"])
+            k = len(idx)
+            sub_metrics = {
+                **sub_metrics,
+                "abft_graph_flags":
+                    np.asarray(sub_metrics["abft_graph_flags"])[:k],
+                "abft_graph_max_rel":
+                    np.asarray(sub_metrics["abft_graph_max_rel"])[:k],
+                "abft_rows_recomputed":
+                    int(sub.n_nodes.sum()) * n_layers}
+            out = np.asarray(out).copy()
+            for j, gi in enumerate(idx):
+                o, n = pb.row_offsets[gi], pb.n_nodes[gi]
+                so, sn = sub.row_offsets[j], sub.n_nodes[j]
+                out[o:o + n] = np.asarray(sub_logits)[so:so + sn]
+            return out, sub_metrics
+        return retry
+
+    def stripe_retry_fn(self, pb: PackedGraphs):
+        """Surgical tier: gather the flagged stripes' tile rows, re-execute
+        them through the fused kernel against the SAME packed operands,
+        splice the rows back, and re-verify — no re-packing, no whole-graph
+        replay (``engine.localize.surgical_stripe_retry``)."""
+        from repro.engine.localize import surgical_stripe_retry
+
+        def sretry(out, metrics):
+            return surgical_stripe_retry(pb, self.params, self.cfg, out,
+                                         metrics, block_g=self.block_g)
+        return sretry
+
+
+def dense_retry_fn(step, b: GraphBatch):
+    """retry(out, idx): re-run only the flagged slots as a smaller dense
+    sub-batch and patch their logits back.  The sub-batch pads up the
+    power-of-two slot ladder (1, 2, 4, …) with empty all-zero graphs —
+    which contribute 0 = 0 to every check and can never flag — so distinct
+    flagged counts share O(log) compiles of ``step`` instead of one each."""
+    def retry(out, idx):
+        k = len(idx)
+        pad = next_pow2(k)
+        sub_s = np.zeros((pad,) + b.s.shape[1:], b.s.dtype)
+        sub_h = np.zeros((pad,) + b.h0.shape[1:], b.h0.dtype)
+        sub_s[:k] = b.s[idx]
+        sub_h[:k] = b.h0[idx]
+        sub_logits, sub_metrics = step(jnp.asarray(sub_s),
+                                       jnp.asarray(sub_h))
+        sub_metrics = {
+            **sub_metrics,
+            "abft_graph_flags":
+                np.asarray(sub_metrics["abft_graph_flags"])[:k],
+            "abft_graph_max_rel":
+                np.asarray(sub_metrics["abft_graph_max_rel"])[:k]}
+        out = np.asarray(out).copy()
+        out[idx] = np.asarray(sub_logits)[:k]
+        return out, sub_metrics
+    return retry
+
+
+# ---------------------------------------------------------------------------
+# canonical shape rungs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Rung:
+    """One canonical packed shape: a batch padded against this rung always
+    presents [stripe_cap stripes x width_cap ELL slots x n_slots graph
+    segments] to jit."""
+
+    stripe_cap: int
+    width_cap: int
+    n_slots: int
+
+
+@dataclasses.dataclass(frozen=True)
+class RungTable:
+    """The fixed shape menu of a streaming server.
+
+    ``fit`` returns the smallest rung admitting a request (by stripe count
+    AND ELL width), or None — the oversize path.  The table's length bounds
+    the server's steady-state jit-compile count.
+    """
+
+    rungs: Tuple[Rung, ...]
+    block: int
+    stripe_multiple: int = 1
+    width_multiple: int = 1
+
+    def __len__(self) -> int:
+        return len(self.rungs)
+
+    def fit(self, stripes: int, width: int) -> Optional[Rung]:
+        for r in self.rungs:
+            if stripes <= r.stripe_cap and width <= r.width_cap:
+                return r
+        return None
+
+
+def plan_rungs(profile: Sequence[Tuple[np.ndarray, np.ndarray]], *,
+               n_slots: int, block: int = 32, stripe_multiple: int = 4,
+               width_multiple: int = 4, max_rungs: int = 4) -> RungTable:
+    """Choose canonical rungs from a traffic profile (a sample of (S, H0)
+    pairs representative of the stream).
+
+    The base rung's stripe capacity is the profile's mean stripe count x
+    ``n_slots`` (a full bin of typical graphs), rounded up to the
+    ``stripe_multiple`` quantum — the same capacity ``schedule_packs``
+    fills closed batches toward.  Capacities then double until the largest
+    profiled graph fits alone (so no profiled size is oversized), capped
+    at ``max_rungs`` entries with the last rung forced large enough.
+    Width is one shared cap: the profile's max, quantized.
+    """
+    if not profile:
+        raise ValueError("plan_rungs needs a non-empty traffic profile")
+    if n_slots < 1:
+        raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+    stats = [graph_pack_stats(s, block) for s, _ in profile]
+    stripes = [st for st, _ in stats]
+    sq = max(stripe_multiple, 1)
+    wq = max(width_multiple, 1)
+    width_cap = -(-max(w for _, w in stats) // wq) * wq
+    mean_up = -(-sum(stripes) // len(stripes))
+    base = -(-mean_up * n_slots // sq) * sq
+    need = -(-max(stripes) // sq) * sq      # largest single profiled graph
+    caps = [base]
+    while caps[-1] < need and len(caps) < max_rungs:
+        caps.append(caps[-1] * 2)
+    caps[-1] = max(caps[-1], need)
+    rungs = tuple(Rung(stripe_cap=c, width_cap=width_cap, n_slots=n_slots)
+                  for c in caps)
+    return RungTable(rungs=rungs, block=block, stripe_multiple=sq,
+                     width_multiple=wq)
+
+
+# ---------------------------------------------------------------------------
+# the streaming engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RequestResult:
+    """Per-request verdict + latency accounting."""
+
+    rid: int
+    status: str                       # "served" | "rejected" |
+    #                                   "rejected_oversize"
+    flag: Optional[bool] = None       # final adopted ABFT verdict
+    max_rel: float = 0.0
+    logits: Optional[np.ndarray] = None
+    reason: str = ""
+    t_enqueue: float = 0.0
+    t_dispatch: Optional[float] = None
+    t_verdict: Optional[float] = None
+
+    @property
+    def latency(self) -> Optional[float]:
+        """Enqueue -> verdict seconds (None until adjudicated)."""
+        if self.t_verdict is None:
+            return None
+        return self.t_verdict - self.t_enqueue
+
+
+@dataclasses.dataclass
+class _OpenBin:
+    rung: Rung
+    items: List[Tuple[int, np.ndarray, np.ndarray]]  # (rid, s, h0)
+    load: int = 0                     # total stripes parked here
+    first_enqueue: float = 0.0
+
+
+class StreamingEngine:
+    """Continuous-traffic GCN serving with bounded compiles and an explicit
+    latency/backpressure contract.  See the module docstring for the
+    architecture; the per-batch check/retry semantics are exactly
+    ``launch/serve_gcn.py``'s (same :class:`PackedRunner`, same
+    ``ABFTGuard`` ladder).
+
+    Single-threaded and cooperative: ``submit`` packs and dispatches as
+    bins fill, ``pump`` applies the flush deadline to a trickle stream,
+    ``drain`` flushes everything and adjudicates the tail.  Completed
+    verdicts are collected with ``take_results``.
+    """
+
+    def __init__(self, params, cfg: ABFTConfig, rungs: RungTable, *,
+                 guard: Optional[ABFTGuard] = None,
+                 queue_capacity: int = 64,
+                 flush_deadline: Optional[float] = None,
+                 oversize_policy: str = "singleton",
+                 block_g: Optional[int] = None,
+                 fused_layer: bool = False,
+                 granularity: str = "graph",
+                 keep_logits: bool = True,
+                 clock: Callable[[], float] = time.perf_counter):
+        if oversize_policy not in ("singleton", "reject"):
+            raise ValueError(f"oversize_policy {oversize_policy!r} not in "
+                             f"('singleton', 'reject')")
+        if granularity not in ("graph", "stripe"):
+            raise ValueError(f"granularity {granularity!r} not in "
+                             f"('graph', 'stripe')")
+        if queue_capacity < 1:
+            raise ValueError("queue_capacity must be >= 1")
+        self.cfg = cfg
+        self.rungs = rungs
+        self.params = fold_w_r(params, cfg)
+        self.runner = PackedRunner(self.params, cfg,
+                                   rungs.block if block_g is None
+                                   else block_g,
+                                   fused_layer, granularity)
+        self.guard = guard if guard is not None else ABFTGuard()
+        self.queue_capacity = queue_capacity
+        self.flush_deadline = flush_deadline
+        self.oversize_policy = oversize_policy
+        self.granularity = granularity
+        self.keep_logits = keep_logits
+        self.clock = clock
+        self._bins: Dict[Rung, _OpenBin] = {}
+        self._inflight: Optional[Tuple[PackedGraphs, Any, Any,
+                                       List[int]]] = None
+        self._results: Dict[int, RequestResult] = {}
+        self._done: List[RequestResult] = []
+        self._next_rid = 0
+        self.submitted = 0
+        self.served = 0
+        self.rejected = 0
+        self.rejected_oversize = 0
+        self.singleton_dispatches = 0
+        self.batches_dispatched = 0
+
+    # -- intake ------------------------------------------------------------
+
+    def warmup(self) -> int:
+        """Compile every rung's canonical shape up front (a one-node empty
+        graph padded to the rung) so the first real batches don't pay the
+        trace+compile inside their measured latency.  Returns the compile
+        count afterwards."""
+        feat = self.params["layers"][0]["w"].shape[0]
+        probe = (np.zeros((1, 1), np.float32), np.zeros((1, feat),
+                                                        np.float32))
+        for r in self.rungs.rungs:
+            pb = pack_graphs([probe], block=self.rungs.block,
+                             n_slots=r.n_slots,
+                             stripe_multiple=self.rungs.stripe_multiple,
+                             width_multiple=self.rungs.width_multiple,
+                             stripe_cap=r.stripe_cap, width_cap=r.width_cap)
+            out, metrics = self.runner.step_for(pb)(*packed_step_args(pb))
+            jax.block_until_ready(metrics["abft_graph_flags"])
+        return self.compile_count
+
+    def submit(self, s: np.ndarray, h0: np.ndarray, *,
+               now: Optional[float] = None) -> int:
+        """Enqueue one request; returns its request id.
+
+        Backpressure and oversize rejections resolve *immediately* (the
+        result is already in ``take_results`` when submit returns);
+        admitted requests resolve when their batch is adjudicated.
+        ``now`` overrides the clock (deterministic deadline tests).
+        """
+        now = self.clock() if now is None else now
+        self._sweep_deadlines(now)
+        rid = self._next_rid
+        self._next_rid += 1
+        self.submitted += 1
+        res = RequestResult(rid=rid, status="served", t_enqueue=now)
+        self._results[rid] = res
+        s = np.asarray(s)
+        h0 = np.asarray(h0)
+        stripes, width = graph_pack_stats(s, self.rungs.block)
+        rung = self.rungs.fit(stripes, width)
+        if rung is None:
+            self._take_oversized(rid, s, h0, stripes, width, now)
+            return rid
+        if self._queued() >= self.queue_capacity:
+            self._finish_rejected(
+                res, "rejected",
+                f"queue full ({self.queue_capacity} requests parked)", now)
+            self.rejected += 1
+            return rid
+        b = self._bins.get(rung)
+        if b is not None and (len(b.items) >= rung.n_slots
+                              or b.load + stripes > rung.stripe_cap):
+            self._seal(rung, now)
+            b = None
+        if b is None:
+            b = _OpenBin(rung=rung, items=[], first_enqueue=now)
+            self._bins[rung] = b
+        b.items.append((rid, s, h0))
+        b.load += stripes
+        if len(b.items) >= rung.n_slots or b.load >= rung.stripe_cap:
+            self._seal(rung, now)
+        return rid
+
+    def pump(self, now: Optional[float] = None) -> None:
+        """Advance time-driven work: flush bins past the deadline.  Call
+        periodically on a trickle stream (the driver calls it between
+        arrivals)."""
+        self._sweep_deadlines(self.clock() if now is None else now)
+
+    def drain(self, now: Optional[float] = None) -> List[RequestResult]:
+        """Seal every open bin, adjudicate everything in flight, and return
+        ALL completed results collected since the last ``take_results``."""
+        now = self.clock() if now is None else now
+        for rung in list(self._bins):
+            self._seal(rung, now)
+        self._resolve_inflight()
+        return self.take_results()
+
+    def take_results(self) -> List[RequestResult]:
+        """Completed verdicts since the last call (rid order)."""
+        done, self._done = self._done, []
+        return sorted(done, key=lambda r: r.rid)
+
+    # -- internals ---------------------------------------------------------
+
+    def _queued(self) -> int:
+        return sum(len(b.items) for b in self._bins.values())
+
+    def _finish_rejected(self, res: RequestResult, status: str, reason: str,
+                         now: float) -> None:
+        res.status = status
+        res.reason = reason
+        res.t_verdict = now
+        self._done.append(self._results.pop(res.rid))
+
+    def _take_oversized(self, rid: int, s, h0, stripes: int, width: int,
+                        now: float) -> None:
+        res = self._results[rid]
+        if self.oversize_policy == "reject":
+            self._finish_rejected(
+                res, "rejected_oversize",
+                f"graph needs {stripes} stripes / width {width}; largest "
+                f"rung is {self.rungs.rungs[-1]}", now)
+            self.rejected_oversize += 1
+            return
+        # dedicated singleton shape: power-of-two quantized so repeat
+        # offenders share compiles; the request still runs fully checked
+        sq, wq = self.rungs.stripe_multiple, self.rungs.width_multiple
+        pb = pack_graphs([(s, h0)], block=self.rungs.block, n_slots=1,
+                         stripe_multiple=sq, width_multiple=wq,
+                         stripe_cap=sq * next_pow2(-(-stripes // sq)),
+                         width_cap=wq * next_pow2(-(-width // wq)),
+                         indices=[rid])
+        self.singleton_dispatches += 1
+        self._dispatch(pb, [rid], now)
+
+    def _sweep_deadlines(self, now: float) -> None:
+        if self.flush_deadline is None:
+            return
+        for rung, b in list(self._bins.items()):
+            if b.items and now - b.first_enqueue >= self.flush_deadline:
+                self._seal(rung, now)
+
+    def _seal(self, rung: Rung, now: float) -> None:
+        b = self._bins.pop(rung, None)
+        if b is None or not b.items:
+            return
+        # pack on the host FIRST (overlaps the in-flight batch's device
+        # execution), then adjudicate the previous batch, then dispatch
+        rids = [rid for rid, _, _ in b.items]
+        pb = pack_graphs([(s, h0) for _, s, h0 in b.items],
+                         block=self.rungs.block, n_slots=rung.n_slots,
+                         stripe_multiple=self.rungs.stripe_multiple,
+                         width_multiple=self.rungs.width_multiple,
+                         stripe_cap=rung.stripe_cap,
+                         width_cap=rung.width_cap, indices=rids)
+        self._dispatch(pb, rids, now)
+
+    def _dispatch(self, pb: PackedGraphs, rids: List[int],
+                  now: float) -> None:
+        self._resolve_inflight()
+        step = self.runner.step_for(pb)
+        out, metrics = step(*packed_step_args(pb))   # async dispatch
+        t = self.clock()
+        for rid in rids:
+            self._results[rid].t_dispatch = t
+        self.batches_dispatched += 1
+        self._inflight = (pb, out, metrics, rids)
+
+    def _resolve_inflight(self) -> None:
+        if self._inflight is None:
+            return
+        pb, out, metrics, rids = self._inflight
+        self._inflight = None
+        stripe_retry = (self.runner.stripe_retry_fn(pb)
+                        if self.granularity == "stripe" else None)
+        step = self.runner.step_for(pb)
+        out, metrics = self.guard.adjudicate(
+            out, metrics, self.runner.retry_fn(pb),
+            stripe_retry_fn=stripe_retry,
+            replay=(step, packed_step_args(pb)))
+        t = self.clock()
+        out = np.asarray(out)
+        gflags = np.asarray(metrics["abft_graph_flags"], bool)
+        grel = np.asarray(metrics.get("abft_graph_max_rel",
+                                      np.zeros(pb.n_slots)), np.float32)
+        for k, rid in enumerate(rids):
+            res = self._results.pop(rid)
+            res.status = "served"
+            res.flag = bool(gflags[k])
+            res.max_rel = float(grel[k])
+            res.t_verdict = t
+            if self.keep_logits:
+                o, n = pb.row_offsets[k], pb.n_nodes[k]
+                res.logits = out[o:o + n].copy()
+            self._done.append(res)
+            self.served += 1
+
+    # -- accounting --------------------------------------------------------
+
+    @property
+    def compile_count(self) -> int:
+        """Distinct jitted packed shapes built so far — the bounded-compile
+        contract compares this against ``len(self.rungs)`` (+ the O(log)
+        singleton/retry ladder shapes when those paths fired)."""
+        return self.runner.compile_count
+
+    def stats(self, results: Optional[Sequence[RequestResult]] = None
+              ) -> Dict[str, Any]:
+        """Latency/throughput SLO summary over ``results`` (or everything
+        completed-and-not-yet-taken plus nothing — pass the collected
+        results for a whole-run view)."""
+        rs = list(results) if results is not None else list(self._done)
+        lat = np.asarray([r.latency for r in rs
+                          if r.status == "served" and r.latency is not None])
+        served = [r for r in rs if r.status == "served"]
+        span = ((max(r.t_verdict for r in served)
+                 - min(r.t_enqueue for r in served))
+                if served else 0.0)
+        return {
+            "submitted": self.submitted,
+            "served": len(served),
+            "rejected": sum(r.status == "rejected" for r in rs),
+            "rejected_oversize": sum(r.status == "rejected_oversize"
+                                     for r in rs),
+            "flagged": sum(bool(r.flag) for r in served),
+            "batches": self.batches_dispatched,
+            "singleton_dispatches": self.singleton_dispatches,
+            "compiles": self.compile_count,
+            "rung_table_size": len(self.rungs),
+            "latency_p50_ms": float(np.percentile(lat, 50) * 1e3)
+            if lat.size else None,
+            "latency_p99_ms": float(np.percentile(lat, 99) * 1e3)
+            if lat.size else None,
+            "latency_max_ms": float(lat.max() * 1e3) if lat.size else None,
+            "graphs_per_sec": len(served) / span if span > 0 else None,
+            "guard_flags": self.guard.flags,
+            "guard_retries": self.guard.retries,
+        }

@@ -120,6 +120,50 @@ def pad_block_rows(bell: BlockEll, multiple: int) -> BlockEll:
     return BlockEll(values=values, block_cols=block_cols, shape=bell.shape)
 
 
+def pad_width(bell: BlockEll, width_to: int) -> BlockEll:
+    """Pad the ELL width (tiles per stripe) to an exact slot count.
+
+    Canonical serving shapes need every batch of a rung to present the SAME
+    [n_block_rows, width] tile table to jit regardless of which graphs
+    landed in it.  Padding slots follow the layout's standing convention —
+    column-block 0 with all-zero values — so they contribute nothing to the
+    product or either side of the check and need no masking downstream."""
+    if width_to < bell.width:
+        raise ValueError(f"cannot pad ELL width {bell.width} down to "
+                         f"{width_to}")
+    if width_to == bell.width:
+        return bell
+    add = width_to - bell.width
+    nbm = bell.n_block_rows
+    values = np.concatenate(
+        [bell.values,
+         np.zeros((nbm, add, bell.block_m, bell.block_k), np.float32)],
+        axis=1)
+    block_cols = np.concatenate(
+        [bell.block_cols, np.zeros((nbm, add), np.int32)], axis=1)
+    return BlockEll(values=values, block_cols=block_cols, shape=bell.shape)
+
+
+def pad_block_rows_to(bell: BlockEll, n_block_rows: int) -> BlockEll:
+    """Pad the stripe count to an exact value (the rung's stripe capacity).
+
+    Unlike :func:`pad_block_rows` (round up to a multiple) this pins the
+    stripe axis, so every batch of a canonical rung shares one jit shape.
+    Padding stripes are the usual all-zero tiles aliasing column-block 0."""
+    add = n_block_rows - bell.n_block_rows
+    if add < 0:
+        raise ValueError(f"cannot pad {bell.n_block_rows} block rows down "
+                         f"to {n_block_rows}")
+    if add == 0:
+        return bell
+    values = np.concatenate(
+        [bell.values,
+         np.zeros((add,) + bell.values.shape[1:], np.float32)], axis=0)
+    block_cols = np.concatenate(
+        [bell.block_cols, np.zeros((add, bell.width), np.int32)], axis=0)
+    return BlockEll(values=values, block_cols=block_cols, shape=bell.shape)
+
+
 def stack_block_ell(bells: Sequence[BlockEll],
                     col_block_offsets: Sequence[int],
                     shape: Optional[Tuple[int, int]] = None,

@@ -1,6 +1,16 @@
-"""Batched multi-graph GCN serving driver on the unified engine.
+"""Closed-batch multi-graph GCN serving driver (benchmark mode).
 
-Variable-size graphs arrive as a stream and are batched one of two ways:
+This driver materializes a whole stream, packs it once, and replays the
+batches — the right harness for apples-to-apples throughput benchmarks
+(``benchmarks/serve_backends.py``), where arrival timing must not pollute
+the measurement.  For continuous traffic use the streaming server
+(``repro.launch.serve_stream`` / ``engine.streaming.StreamingEngine``):
+bounded request queue, online packing into canonical rung shapes, p50/p99
+latency accounting, and backpressure.  Both run the SAME machinery —
+``engine.streaming.PackedRunner``'s jitted steps, retry ladders, and the
+``ABFTGuard`` escalation ladder — this module is a thin client of it.
+
+Variable-size graphs batch one of two ways:
 
 * ``--backend dense``      — bucketed zero-padding into [B, N, N] dense
   batches (one compile per bucket), O(B·N²·F) per bucket regardless of
@@ -32,192 +42,32 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import List, Optional, Sequence, Tuple, Union
+from typing import List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.abft import ABFTConfig, per_graph_report, \
-    per_stripe_report, summarize
+from repro.core.abft import ABFTConfig
 from repro.core.gcn import init_gcn
-from repro.engine import Graph, GraphBatch, PackedGraphs, fold_w_r, \
-    gcn_forward, make_batches, make_packed_batches, pack_graphs, \
-    synth_graph_stream
-from repro.engine.backends import BlockEllBackend
+from repro.engine import GraphBatch, PackedGraphs, fold_w_r, \
+    make_batches, make_packed_batches, synth_graph_stream
+from repro.engine.streaming import (
+    PackedRunner,
+    dense_retry_fn,
+    make_packed_serve_step,
+    make_serve_step,
+    packed_step_args,
+)
 from repro.runtime import ABFTGuard
 
 Batch = Union[GraphBatch, PackedGraphs]
 
-
-def make_serve_step(params, cfg: ABFTConfig):
-    """Jitted (s, h0) -> (logits, metrics) batched dense engine step.
-
-    One compile per distinct (batch, bucket) shape; the dense backend
-    broadcasts over the leading batch axis, so the batch contributes
-    batched scalar checks — reduced into one replicated report AND kept
-    per-graph for the guard's partial retry.
-    """
-    @jax.jit
-    def step(s, h0):
-        logits, checks = gcn_forward(params, Graph(s=s, h0=h0), cfg,
-                                     backend="dense")
-        report = summarize(checks, cfg)
-        gflags, grel = per_graph_report(checks, cfg, s.shape[0])
-        return logits, {"abft_flag": report.flag,
-                        "abft_max_rel": report.max_rel,
-                        "abft_n_checks": report.n_checks,
-                        "abft_graph_flags": gflags,
-                        "abft_graph_max_rel": grel}
-    return step
-
-
-def make_packed_serve_step(params, cfg: ABFTConfig, n_slots: int, *,
-                           block_g: int = 128,
-                           interpret: Optional[bool] = None,
-                           fused_layer: bool = False,
-                           granularity: str = "graph",
-                           inject=None):
-    """Jitted (cols, vals, segments, h0) -> (logits, metrics) packed step.
-
-    The packed block-ELL arrays are *arguments*, not baked-in constants, so
-    every batch of the same packed shape shares one compile; the segmented
-    epilogue's per-graph corners feed both the replicated report and the
-    per-graph verdict vector.  ``fused_layer=True`` runs each layer through
-    the single-pass gcn_fused kernel (combination + aggregation + check in
-    one HBM traversal) instead of the two-pass combination-then-spmm path.
-
-    ``granularity="stripe"`` keeps the per-row-stripe corners: the metrics
-    gain ``abft_stripe_flags`` / ``abft_stripe_max_rel`` ([checks,
-    n_stripes] verdicts, the per-graph vector now segment-reduced from
-    them) and ``abft_h_layers`` (every layer's input activations) — the
-    operands the guard's surgical stripe retry needs.  ``inject`` is the
-    benchmark/CI accumulator fault hook, ``(layer, stripe, slot, delta)``
-    threaded to the fused kernel (requires ``fused_layer=True``).
-    """
-    interpret = (jax.default_backend() != "tpu" if interpret is None
-                 else interpret)
-
-    @jax.jit
-    def step(cols, vals, segments, h0):
-        bk = BlockEllBackend.from_staged(cols, vals, segments, n_slots, cfg,
-                                         block_g=block_g,
-                                         interpret=interpret,
-                                         fused_layer=fused_layer,
-                                         granularity=granularity,
-                                         inject=inject)
-        logits, checks, h_layers = gcn_forward(
-            params, Graph(s=None, h0=h0), cfg, backend=bk,
-            return_intermediates=True)
-        report = summarize(checks, cfg)
-        metrics = {"abft_flag": report.flag,
-                   "abft_max_rel": report.max_rel,
-                   "abft_n_checks": report.n_checks}
-        if granularity == "stripe":
-            gflags, grel = per_graph_report(checks, cfg, n_slots,
-                                            segments=segments)
-            sflags, srel = per_stripe_report(checks, cfg, vals.shape[0])
-            metrics.update(abft_stripe_flags=sflags,
-                           abft_stripe_max_rel=srel,
-                           abft_h_layers=h_layers)
-        else:
-            gflags, grel = per_graph_report(checks, cfg, n_slots)
-        metrics.update(abft_graph_flags=gflags, abft_graph_max_rel=grel)
-        return logits, metrics
-    return step
-
-
-def _packed_args(pb: PackedGraphs) -> Tuple[jax.Array, ...]:
-    return (jnp.asarray(pb.bell.block_cols), jnp.asarray(pb.bell.values),
-            jnp.asarray(pb.stripe_graph), jnp.asarray(pb.h0))
-
-
-class _PackedRunner:
-    """Per-shape jitted packed steps + the per-graph retry closure."""
-
-    def __init__(self, params, cfg: ABFTConfig, block_g: int,
-                 fused_layer: bool = False, granularity: str = "graph"):
-        self.params, self.cfg = params, cfg
-        self.block_g = block_g
-        self.fused_layer = fused_layer
-        self.granularity = granularity
-        self._steps = {}
-
-    def step_for(self, pb: PackedGraphs):
-        key = (pb.bell.values.shape, pb.h0.shape, pb.n_slots)
-        if key not in self._steps:
-            if self.fused_layer:
-                self._warn_fallbacks(pb)
-            self._steps[key] = make_packed_serve_step(
-                self.params, self.cfg, pb.n_slots, block_g=self.block_g,
-                fused_layer=self.fused_layer, granularity=self.granularity)
-        return self._steps[key]
-
-    def _warn_fallbacks(self, pb: PackedGraphs):
-        """The VMEM-budget decision happens at trace time inside the jitted
-        step, where it is invisible to the operator — so surface it eagerly,
-        once per packed shape, from the layer widths we already know."""
-        import warnings
-
-        from repro.kernels.gcn_fused.ops import fused_layer_fits
-
-        bm, bk = pb.bell.values.shape[2:4]
-        wide = [tuple(layer["w"].shape) for layer in self.params["layers"]
-                if not fused_layer_fits(*layer["w"].shape, bm, bk,
-                                        block_g=self.block_g)]
-        if wide:
-            warnings.warn(
-                f"--fused-layer: layer widths {wide} exceed the fused VMEM "
-                f"budget; those layers run the two-pass kernel instead")
-
-    def retry_fn(self, pb: PackedGraphs):
-        """retry(out, idx): re-pack ONLY the flagged graphs into a small
-        block-diagonal system (same block size as the parent batch),
-        re-run, and patch their logit rows back — the unflagged graphs'
-        verified rows are untouched.  Sub-pack steps share the same
-        per-shape cache, so a flaky chip retrying one graph per batch
-        compiles once, not per batch."""
-        def retry(out, idx):
-            items = [pb.items[i] for i in idx]
-            sub = pack_graphs(items, block=pb.block,
-                              stripe_multiple=pb.stripe_multiple,
-                              width_multiple=pb.width_multiple)
-            sub_logits, sub_metrics = self.step_for(sub)(*_packed_args(sub))
-            n_layers = len(self.params["layers"])
-            sub_metrics = {**sub_metrics,
-                           "abft_rows_recomputed":
-                               int(sub.bell.padded_rows) * n_layers}
-            out = np.asarray(out).copy()
-            for k, gi in enumerate(idx):
-                o, n = pb.row_offsets[gi], pb.n_nodes[gi]
-                so, sn = sub.row_offsets[k], sub.n_nodes[k]
-                out[o:o + n] = np.asarray(sub_logits)[so:so + sn]
-            return out, sub_metrics
-        return retry
-
-    def stripe_retry_fn(self, pb: PackedGraphs):
-        """Surgical tier: gather the flagged stripes' tile rows, re-execute
-        them through the fused kernel against the SAME packed operands,
-        splice the rows back, and re-verify — no re-packing, no whole-graph
-        replay (``engine.localize.surgical_stripe_retry``)."""
-        from repro.engine.localize import surgical_stripe_retry
-
-        def sretry(out, metrics):
-            return surgical_stripe_retry(pb, self.params, self.cfg, out,
-                                         metrics, block_g=self.block_g)
-        return sretry
-
-
-def _dense_retry_fn(step, b: GraphBatch):
-    """retry(out, idx): re-run only the flagged slots as a smaller dense
-    sub-batch and patch their logits back."""
-    def retry(out, idx):
-        sub_logits, sub_metrics = step(jnp.asarray(b.s[idx]),
-                                       jnp.asarray(b.h0[idx]))
-        out = np.asarray(out).copy()
-        out[idx] = np.asarray(sub_logits)
-        return out, sub_metrics
-    return retry
+# long-standing private aliases, kept for callers that grew around the
+# pre-streaming layout (benchmarks/localization.py, external notebooks)
+_PackedRunner = PackedRunner
+_packed_args = packed_step_args
+_dense_retry_fn = dense_retry_fn
 
 
 def serve(batches: Sequence[Batch], params, cfg: ABFTConfig,
@@ -241,13 +91,13 @@ def serve(batches: Sequence[Batch], params, cfg: ABFTConfig,
     guard = guard if guard is not None else ABFTGuard()
     params = fold_w_r(params, cfg)
     dense_step = None
-    packed = _PackedRunner(params, cfg, block_g, fused_layer, granularity)
+    packed = PackedRunner(params, cfg, block_g, fused_layer, granularity)
 
     def run_one(b: Batch, warm: bool):
         nonlocal dense_step
         stripe_retry = None
         if isinstance(b, PackedGraphs):
-            step, args = packed.step_for(b), _packed_args(b)
+            step, args = packed.step_for(b), packed_step_args(b)
             retry = packed.retry_fn(b)
             if granularity == "stripe":
                 stripe_retry = packed.stripe_retry_fn(b)
@@ -260,7 +110,7 @@ def serve(batches: Sequence[Batch], params, cfg: ABFTConfig,
                 dense_step = make_serve_step(params, cfg)
             step = dense_step
             args = (jnp.asarray(b.s), jnp.asarray(b.h0))
-            retry = _dense_retry_fn(dense_step, b)
+            retry = dense_retry_fn(dense_step, b)
         if warm:
             out, metrics = step(*args)
         else:

@@ -120,18 +120,55 @@ class ABFTGuard:
 
         ``step_fn(*args)`` returns (out, metrics) where
         ``metrics['abft_graph_flags']`` is the per-graph verdict vector (the
-        packed segmented check corners, or the dense batched checks).  When
-        any graph flags, ``retry_fn(out, flagged_idx)`` re-runs *only* those
-        graphs and returns (patched_out, sub_metrics) with the per-graph
-        entries of ``sub_metrics`` aligned to ``flagged_idx`` — linearity of
-        the checksum makes the per-graph decomposition exact, so the
-        untouched graphs' verified results are kept and the returned metrics
-        reflect the *adopted* executions, not the failed attempts.  The
-        retry's returned vectors are validated against ``flagged_idx``:
+        packed segmented check corners, or the dense batched checks).
+        Equivalent to dispatching the step yourself and handing its outputs
+        to :meth:`adjudicate` — which is exactly what the streaming engine
+        does to overlap host-side packing with device execution.
+        """
+        out, metrics = step_fn(*args)
+        return self.adjudicate(out, metrics, retry_fn,
+                               stripe_retry_fn=stripe_retry_fn,
+                               replay=(step_fn, args))
+
+    @staticmethod
+    def _adopt(metrics):
+        """Adopted-metrics hygiene: the step's intermediate activations
+        (``abft_h_layers``, every layer's full input) exist ONLY so a
+        surgical stripe retry can re-execute flagged rows.  Once the ladder
+        has resolved they are dead weight — a serving loop that retains
+        per-batch metrics would pin every batch's activations for the whole
+        run — so they never leave the guard."""
+        if isinstance(metrics, dict) and "abft_h_layers" in metrics:
+            metrics = {k: v for k, v in metrics.items()
+                       if k != "abft_h_layers"}
+        return metrics
+
+    def adjudicate(self, out, metrics,
+                   retry_fn: Callable[[Any, np.ndarray], Tuple[Any, Any]],
+                   *, stripe_retry_fn: Optional[
+                       Callable[[Any, Any], Tuple[Any, Any]]] = None,
+                   replay: Optional[Tuple[Callable[..., Tuple[Any, Any]],
+                                          tuple]] = None):
+        """Adjudicate one already-dispatched batch step's verdicts.
+
+        ``(out, metrics)`` are a step's raw outputs; reading
+        ``metrics['abft_graph_flags']`` here is the first host-side
+        synchronization, so a caller that dispatches step N, packs batch
+        N+1, and only then adjudicates N gets pack/execute overlap for free
+        (JAX async dispatch) — the streaming engine's double buffer.
+
+        When any graph flags, ``retry_fn(out, flagged_idx)`` re-runs *only*
+        those graphs and returns (patched_out, sub_metrics) with the
+        per-graph entries of ``sub_metrics`` aligned to ``flagged_idx`` —
+        linearity of the checksum makes the per-graph decomposition exact,
+        so the untouched graphs' verified results are kept and the returned
+        metrics reflect the *adopted* executions, not the failed attempts.
+        The retry's returned vectors are validated against ``flagged_idx``:
         a full-batch-aligned vector would silently misattribute verdicts to
         the wrong graphs, so a shape mismatch raises.  Bounded like
         :meth:`run_step`; persistently flagged graphs fall back to the
-        restore->replay->verify path for the whole step.
+        restore->replay->verify path via ``replay=(step_fn, args)`` (no
+        ``replay`` -> the escalation raises instead of replaying).
 
         ``stripe_retry_fn(out, metrics)`` is the optional surgical tier,
         tried FIRST when the step carries per-stripe verdicts
@@ -141,13 +178,17 @@ class ABFTGuard:
         ``sub_metrics['abft_graph_flags']`` vector (all-False on verified
         success) plus ``abft_rows_recomputed`` / ``abft_stripes_recomputed``
         accounting.  An unverified repair escalates to the per-graph tier.
+
+        Adopted metrics never carry ``abft_h_layers`` (the per-layer
+        activation stash exists for the surgical closure only — retaining
+        it per batch would leak every batch's activations over a sustained
+        stream); the closures see the full metrics.
         """
         self.steps += 1
-        out, metrics = step_fn(*args)
         flags = np.array(metrics["abft_graph_flags"], dtype=bool).copy()
         if not flags.any():
             self._recent.append(False)
-            return out, metrics
+            return out, self._adopt(metrics)
         self.flags += 1
         grel = None
         if "abft_graph_max_rel" in metrics:
@@ -199,7 +240,7 @@ class ABFTGuard:
                     metrics["abft_max_rel"] = grel.max(initial=0.0)
                 else:
                     metrics.pop("abft_max_rel", None)
-                return out2, metrics
+                return out2, self._adopt(metrics)
             out, flags = out2, new_flags.copy()
         # --- tier 1: per-graph retry -------------------------------------
         for attempt in range(1, self.cfg.max_retries + 1):
@@ -246,11 +287,19 @@ class ABFTGuard:
                     metrics["abft_max_rel"] = grel.max(initial=0.0)
                 else:
                     metrics.pop("abft_max_rel", None)
-                return out, metrics
+                return out, self._adopt(metrics)
         self._recent.append(True)
+        if replay is None:
+            raise RuntimeError(
+                "ABFT: persistent per-graph fault and no replay=(step_fn, "
+                "args) to escalate to — the dispatching caller must keep "
+                "the step closure alive until adjudication")
         # batch steps take data operands, not model state: a state-returning
         # restore_fn cannot be spliced into the args (run_step's convention)
-        return self._restore_and_replay(step_fn, args, adopt_state=False)
+        step_fn, args = replay
+        out, metrics = self._restore_and_replay(step_fn, args,
+                                                adopt_state=False)
+        return out, self._adopt(metrics)
 
     def _restore_and_replay(self, step_fn, args, *,
                             adopt_state: bool = True) -> Tuple[Any, Any]:
