@@ -1,0 +1,244 @@
+"""Whole-network fusion vs per-layer fusion vs the two-pass path.
+
+For every paper-scale width (Table II: 16–186 features) this runs a full
+L-layer checked GCN three ways —
+
+  * two-pass:   per layer, X = H W by XLA then the spmm_abft kernel reads
+                X tiles back (two HBM traversals per layer);
+  * per-layer:  the gcn_fused kernel per layer — X stays in VMEM, but each
+                layer's post-ReLU activations round-trip through HBM
+                between kernel launches (L traversals);
+  * network:    ONE gcn_network kernel sweep — ReLU + the next layer's
+                combination fold into the aggregation epilogue, the
+                activation matrix ping-pongs between two VMEM buffers, and
+                only the final logits are written (one traversal
+                end-to-end);
+
+and reports wall-clock plus the modeled HBM bytes from
+``kernels.gcn_fused.ops.hbm_bytes_{twopass,fused,network}`` (the network
+model both with and without the ``stash_acts`` repairability export).  On
+CPU the kernels run in interpret mode, so wall-clock favors no path
+honestly; the bytes model is the portable signal (on TPU the byte ratio
+bounds the speedup of these HBM-bound kernels).  Every width asserts
+network-vs-per-layer parity, one clean pre-activation check per layer,
+and that the network bytes — stashed or not — come in strictly below the
+per-layer-fused sum.
+
+Writes ``BENCH_fused_network.json`` (``--json`` to relocate, ``--json ""``
+to disable).  Interpret-mode runs are stamped ``"interpret": true`` and
+``"authoritative": false``; ``--require-compiled`` refuses to run at all
+off-accelerator (exits non-zero), for lanes that must never ingest
+interpret numbers.
+
+    PYTHONPATH=src python -m benchmarks.fused_network --nodes 512
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import List, Optional, Sequence
+
+# paper Table II GCN widths span 16..186; squares keep in=out per layer
+WIDTHS = (16, 32, 64, 128, 186)
+
+
+def _time(fn, reps: int) -> float:
+    import jax
+    jax.block_until_ready(fn())           # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run_width(width: int, bell, *, layers: int, seed: int, reps: int,
+              block_g: int, interpret: bool) -> dict:
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.checksum import row_checksum
+    from repro.kernels.gcn_fused.ops import (
+        fused_network_fits,
+        gcn_fused_layer,
+        gcn_network_layer,
+        hbm_bytes_fused,
+        hbm_bytes_network,
+        hbm_bytes_twopass,
+        network_vmem_bytes,
+    )
+    from repro.kernels.spmm_abft.ops import spmm_abft
+
+    rng = np.random.default_rng(seed + width)
+    n = bell.shape[0]
+    dims = [width] * (layers + 1)
+    h0 = jnp.asarray(rng.normal(0, 0.5, size=(n, width)).astype(np.float32))
+    ws = [jnp.asarray(rng.normal(0, 1.0 / np.sqrt(width),
+                                 size=(width, width)).astype(np.float32))
+          for _ in range(layers)]
+    wrs = [row_checksum(w, jnp.float32) for w in ws]
+
+    def twopass():
+        h, checks = h0, []
+        for ell, (w, w_r) in enumerate(zip(ws, wrs)):
+            x = h @ w
+            x_r = (h.astype(jnp.float32) @ w_r)[:, None]
+            out, chk = spmm_abft(bell, x, x_r, block_g=block_g,
+                                 interpret=interpret)
+            checks.append(chk)
+            h = jnp.maximum(out, 0.0) if ell < layers - 1 else out
+        return h, checks
+
+    def per_layer():
+        h, checks = h0, []
+        for ell, (w, w_r) in enumerate(zip(ws, wrs)):
+            out, chk = gcn_fused_layer(bell, h, w, w_r, block_g=block_g,
+                                       interpret=interpret)
+            checks.append(chk)
+            h = jnp.maximum(out, 0.0) if ell < layers - 1 else out
+        return h, checks
+
+    def network():
+        out, checks, _ = gcn_network_layer(bell, h0, ws, wrs,
+                                           block_g=block_g,
+                                           interpret=interpret)
+        return out, checks
+
+    out_t, _ = twopass()
+    out_f, _ = per_layer()
+    out_n, checks_n = network()
+    err_layer = float(jnp.abs(out_n - out_f).max())
+    err_two = float(jnp.abs(out_n - out_t).max())
+    scale = max(1.0, float(jnp.abs(out_t).max()))
+    assert err_layer == 0.0, \
+        f"network/per-layer-fused parity broke at width {width}: {err_layer}"
+    assert err_two < 1e-3 * scale, \
+        f"network/two-pass parity broke at width {width}: {err_two}"
+    assert len(checks_n) == layers, \
+        f"expected one pre-activation check per layer, got {len(checks_n)}"
+    max_div = 0.0
+    for ell, chk in enumerate(checks_n):
+        div = abs(float(chk.predicted) - float(chk.actual))
+        assert div < 1e-3 * max(1.0, abs(float(chk.actual))), \
+            f"clean network check diverged at width {width} layer {ell}"
+        max_div = max(max_div, div)
+
+    bytes_two = sum(hbm_bytes_twopass(bell, width, width, block_g=block_g)
+                    for _ in range(layers))
+    bytes_fused = sum(hbm_bytes_fused(bell, width, width, block_g=block_g)
+                      for _ in range(layers))
+    bytes_net = hbm_bytes_network(bell, dims, block_g=block_g)
+    bytes_net_stash = hbm_bytes_network(bell, dims, block_g=block_g,
+                                        stash_acts=True)
+    assert bytes_net < bytes_fused, \
+        f"whole-network moved MORE modeled bytes at width {width}"
+    assert bytes_net_stash < bytes_fused, \
+        f"stashed whole-network moved MORE modeled bytes at width {width}"
+    rows = bell.n_block_rows * bell.block_m
+    return {
+        "width": width,
+        "t_twopass_s": _time(lambda: twopass()[0], reps),
+        "t_per_layer_s": _time(lambda: per_layer()[0], reps),
+        "t_network_s": _time(lambda: network()[0], reps),
+        "hbm_bytes_twopass": bytes_two,
+        "hbm_bytes_per_layer": bytes_fused,
+        "hbm_bytes_network": bytes_net,
+        "hbm_bytes_network_stash": bytes_net_stash,
+        "hbm_ratio_vs_per_layer": bytes_net / bytes_fused,
+        "hbm_ratio_stash_vs_per_layer": bytes_net_stash / bytes_fused,
+        "parity_err_vs_per_layer": err_layer,
+        "parity_err_vs_twopass": err_two,
+        "clean_divergence": max_div,
+        "vmem_bytes": network_vmem_bytes(dims, bell.block_m, rows,
+                                         block_g=block_g),
+        "vmem_fits": fused_network_fits(dims, bell.block_m, rows,
+                                        block_g=block_g),
+    }
+
+
+def main(argv: Optional[Sequence[str]] = None) -> List[dict]:
+    import jax
+    import numpy as np
+
+    from repro.core.gcn import normalized_adjacency_dense
+    from repro.kernels.spmm_abft.layout import dense_to_block_ell
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=512)
+    ap.add_argument("--avg-deg", type=int, default=4)
+    ap.add_argument("--layers", type=int, default=2,
+                    help="GCN depth (the paper's models are 2-layer)")
+    ap.add_argument("--block", type=int, default=32,
+                    help="square block size (use 128 on TPU)")
+    ap.add_argument("--block-g", type=int, default=128)
+    ap.add_argument("--widths", default=",".join(map(str, WIDTHS)))
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="BENCH_fused_network.json",
+                    help="write machine-readable results here ('' disables)")
+    ap.add_argument("--require-compiled", action="store_true",
+                    help="exit non-zero when the kernels would run in "
+                         "interpret mode (non-authoritative numbers)")
+    args = ap.parse_args(argv)
+
+    interpret = jax.default_backend() != "tpu"
+    if args.require_compiled and interpret:
+        print(f"FAIL: --require-compiled but backend is "
+              f"{jax.default_backend()!r} — Pallas kernels would run in "
+              f"interpret mode and the numbers would not be authoritative",
+              file=sys.stderr)
+        sys.exit(1)
+    rng = np.random.default_rng(args.seed)
+    n = args.nodes
+    m = n * args.avg_deg // 2
+    e = rng.integers(0, n, size=(3 * m + 16, 2), dtype=np.int64)
+    e = e[e[:, 0] != e[:, 1]]
+    e = np.unique(np.sort(e, axis=1), axis=0)[:m]
+    s = normalized_adjacency_dense(e, n)
+    bell = dense_to_block_ell(s, block_m=args.block, block_k=args.block)
+
+    print(f"=== fused_network: n={n} L={args.layers} block={args.block} "
+          f"tiles={bell.n_block_rows}x{bell.width} "
+          f"({jax.default_backend()}, interpret={interpret}) ===")
+    if interpret:
+        print("WARNING: interpret-mode kernels (no real accelerator) — "
+              "wall-clock numbers are NOT authoritative; the HBM byte "
+              "model is the portable signal, or re-run on TPU")
+    print(f"{'width':>6} {'two-pass MB':>12} {'per-layer MB':>13} "
+          f"{'network MB':>11} {'+stash MB':>10} {'ratio':>7} {'fits':>5}")
+    rows = []
+    for width in (int(w) for w in args.widths.split(",")):
+        r = run_width(width, bell, layers=args.layers, seed=args.seed,
+                      reps=args.reps, block_g=args.block_g,
+                      interpret=interpret)
+        rows.append(r)
+        print(f"{width:>6} {r['hbm_bytes_twopass']/2**20:>12.2f} "
+              f"{r['hbm_bytes_per_layer']/2**20:>13.2f} "
+              f"{r['hbm_bytes_network']/2**20:>11.2f} "
+              f"{r['hbm_bytes_network_stash']/2**20:>10.2f} "
+              f"{r['hbm_ratio_vs_per_layer']:>7.3f} "
+              f"{str(r['vmem_fits']):>5}")
+    if args.json:
+        rec = {"bench": "fused_network",
+               "device_backend": jax.default_backend(),
+               "interpret": interpret,
+               "authoritative": not interpret,
+               "config": {"nodes": n, "avg_deg": args.avg_deg,
+                          "layers": args.layers, "block": args.block,
+                          "block_g": args.block_g, "reps": args.reps,
+                          "seed": args.seed},
+               "layout": {"n_block_rows": bell.n_block_rows,
+                          "width": bell.width,
+                          "nnz_tiles": bell.nnz_tiles},
+               "widths": rows}
+        with open(args.json, "w") as fh:
+            json.dump(rec, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"wrote {args.json}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -36,8 +36,11 @@ MODES = ("none", "split", "fused")
 # linear chain (the paper's granularity); "graph" segments the corner per
 # packed graph (exact by linearity — PR 3); "stripe" keeps the kernel's
 # per-row-stripe partials as individual corners, so a detected fault names
-# the stripe it corrupted and recovery can re-execute just those rows.
-GRANULARITIES = ("layer", "graph", "stripe")
+# the stripe it corrupted and recovery can re-execute just those rows;
+# "slot" differences the kernel's telescoped per-ell-slot running sums into
+# one corner per (stripe, slot) grid step — a fault names the exact tile
+# product (or accumulator step) that produced it.
+GRANULARITIES = ("layer", "graph", "stripe", "slot")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -314,8 +317,23 @@ def per_graph_report(checks: Sequence[Optional[Check]], cfg: ABFTConfig,
         # a packed batch whose stripe count happens to equal its slot count
         # would otherwise read stripe corners as per-graph verdicts and
         # retry the wrong graphs (adopting the corrupted one)
-        if c.granularity != "stripe" and c.actual.shape == (n,):
+        if c.granularity not in ("stripe", "slot") and c.actual.shape == (n,):
             f, r = c.elementwise(cfg)
+        elif c.granularity == "slot" and seg_shape is not None \
+                and c.actual.shape[:1] == seg_shape:
+            # slot-granular corners [n_stripes, width]: reduce the slot axis
+            # (OR / max) to per-stripe verdicts, then segment-reduce onto
+            # the owning graphs exactly like stripe corners below
+            fs, rs = c.elementwise(cfg)
+            fs, rs = fs.any(axis=1), rs.max(axis=1)
+            seg = jnp.asarray(segments)
+            f = jax.ops.segment_sum(fs.astype(jnp.int32), seg,
+                                    num_segments=n + 1,
+                                    indices_are_sorted=True)[:n] > 0
+            r = jnp.maximum(jax.ops.segment_max(rs, seg,
+                                                num_segments=n + 1,
+                                                indices_are_sorted=True)[:n],
+                            0.0)
         elif c.granularity == "stripe" and seg_shape is not None \
                 and c.actual.shape == seg_shape:
             # stripe-granular corners: segment-reduce onto the graphs.
@@ -349,7 +367,9 @@ def per_stripe_report(checks: Sequence[Optional[Check]], cfg: ABFTConfig,
     """Finest-granularity report: one verdict per (check, row-stripe).
 
     Every check's fields must be [n_stripes] per-stripe corners (the
-    block-ELL backends at ``granularity="stripe"``).  Returns
+    block-ELL backends at ``granularity="stripe"``) or [n_stripes, width]
+    slot corners (``granularity="slot"``; the slot axis reduces by OR/max —
+    a stripe is flagged when any of its slots is).  Returns
     (flags [L, n_stripes] bool, max_rel [L, n_stripes] f32) with one row per
     check — the layer axis is preserved, NOT reduced, because the surgical
     retry must know *which layer's* stripe to re-execute (a fault at layer
@@ -361,13 +381,53 @@ def per_stripe_report(checks: Sequence[Optional[Check]], cfg: ABFTConfig,
                 jnp.zeros((0, n_stripes), jnp.float32))
     flags, rels = [], []
     for c in checks:
-        if c.actual.shape != (n_stripes,) or c.granularity != "stripe":
+        if c.granularity == "slot" and c.actual.ndim == 2 \
+                and c.actual.shape[0] == n_stripes:
+            f, r = c.elementwise(cfg)
+            f, r = f.any(axis=1), r.max(axis=1)
+        elif c.actual.shape == (n_stripes,) and c.granularity == "stripe":
+            f, r = c.elementwise(cfg)
+        else:
             raise ValueError(
                 f"per_stripe_report needs [n_stripes={n_stripes}] "
                 f"stripe-granular checks, got shape {c.actual.shape} "
                 f"(granularity={c.granularity!r}); build the backend with "
                 f"granularity='stripe'")
-        f, r = c.elementwise(cfg)
+        flags.append(f)
+        rels.append(r)
+    return jnp.stack(flags), jnp.stack(rels)
+
+
+def per_slot_report(checks: Sequence[Optional[Check]], cfg: ABFTConfig,
+                    n_stripes: int, width: int) -> tuple[Array, Array]:
+    """Finest-granularity report: one verdict per (check, stripe, ell-slot).
+
+    Slot-granular checks carry [n_stripes, width] corners (adjacent
+    differences of the kernel's telescoped running sums — see
+    ``slot_check_corners``); stripe-granular checks in the same forward
+    (e.g. a layer that fell back to the two-pass kernel mid-network)
+    contribute an all-False slab — they still flag at stripe granularity
+    via :func:`per_stripe_report`, they just cannot attribute a slot.
+    Returns (flags [L, n_stripes, width] bool, max_rel [...] f32).
+    """
+    checks = [c for c in checks if c is not None]
+    if not checks or not cfg.enabled:
+        return (jnp.zeros((0, n_stripes, width), bool),
+                jnp.zeros((0, n_stripes, width), jnp.float32))
+    flags, rels = [], []
+    for c in checks:
+        if c.granularity == "slot" and \
+                c.actual.shape == (n_stripes, width):
+            f, r = c.elementwise(cfg)
+        elif c.granularity == "stripe" and c.actual.shape == (n_stripes,):
+            f = jnp.zeros((n_stripes, width), bool)
+            r = jnp.zeros((n_stripes, width), jnp.float32)
+        else:
+            raise ValueError(
+                f"per_slot_report needs [n_stripes={n_stripes}, "
+                f"width={width}] slot-granular checks, got shape "
+                f"{c.actual.shape} (granularity={c.granularity!r}); build "
+                f"the backend with granularity='slot'")
         flags.append(f)
         rels.append(r)
     return jnp.stack(flags), jnp.stack(rels)

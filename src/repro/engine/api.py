@@ -66,8 +66,31 @@ class Graph:
         return int(self.h0.shape[-2])
 
 
+def _resolve_w_r(w: Array, w_r: Optional[Array],
+                 cfg: ABFTConfig) -> Optional[Array]:
+    """The per-layer right checksum w_r = W·e, resolved once: computed at
+    ``cfg.dtype`` when absent, validated against the REALIZED checksum
+    dtype when folded (x64-disabled f64 requests realize as f32 — same
+    convention as the s_c auto-stash key), ``None`` when checking is off.
+    Shared by the per-layer path and the whole-network hook so a stale
+    fold raises identically on both."""
+    if not cfg.enabled:
+        return None
+    if w_r is None:
+        return row_checksum(w, cfg.dtype)
+    want = jax.dtypes.canonicalize_dtype(jnp.dtype(cfg.dtype))
+    if jnp.asarray(w_r).dtype != want:
+        raise ValueError(
+            f"folded w_r has dtype {jnp.asarray(w_r).dtype} but "
+            f"cfg.dtype realizes as {want}: the checks would run at a "
+            f"stale precision.  Re-run engine.fold_w_r(params, cfg) "
+            f"after changing ABFTConfig.dtype (or drop the fold to "
+            f"recompute w_r per step)")
+    return w_r
+
+
 def gcn_layer(bk: AggregationBackend, h: Array, w: Array, cfg: ABFTConfig,
-              *, w_r: Optional[Array] = None
+              *, w_r: Optional[Array] = None, return_x: bool = False
               ) -> Tuple[Array, List[Check]]:
     """One pre-activation GCN layer H_out = S (H W) under ABFT policy.
 
@@ -86,36 +109,32 @@ def gcn_layer(bk: AggregationBackend, h: Array, w: Array, cfg: ABFTConfig,
     A passed-in ``w_r`` must have been folded at this config's checksum
     dtype: consuming a stale fold verbatim would silently run every check
     at the old precision, so a mismatch raises instead.
+
+    ``return_x=True`` appends the materialized combination output X to the
+    result — ``None`` when the backend's fused layer hook ran (X never
+    existed).  The stripe-surgical repair uses the stashed X to replay a
+    two-pass layer's aggregation bit-for-bit.
     """
-    if cfg.enabled and w_r is None:
-        w_r = row_checksum(w, cfg.dtype)
-    elif cfg.enabled:
-        # compare against the REALIZED dtype (x64-disabled f64 requests
-        # realize as f32 — same convention as the s_c auto-stash key)
-        want = jax.dtypes.canonicalize_dtype(jnp.dtype(cfg.dtype))
-        if jnp.asarray(w_r).dtype != want:
-            raise ValueError(
-                f"folded w_r has dtype {jnp.asarray(w_r).dtype} but "
-                f"cfg.dtype realizes as {want}: the checks would run at a "
-                f"stale precision.  Re-run engine.fold_w_r(params, cfg) "
-                f"after changing ABFTConfig.dtype (or drop the fold to "
-                f"recompute w_r per step)")
+    w_r = _resolve_w_r(w, w_r, cfg)
     if cfg.mode != "split":
-        fused = bk.layer(h, w, cfg, w_r=w_r if cfg.enabled else None)
+        fused = bk.layer(h, w, cfg, w_r=w_r)
         if fused is not NotImplemented:
             h_out, chk = fused
-            return h_out, ([] if chk is None else [chk])
+            checks = [] if chk is None else [chk]
+            return (h_out, checks, None) if return_x else (h_out, checks)
     x = h @ w
     if not cfg.enabled:
         h_out, _ = bk.aggregate(x, None)
-        return h_out, []
+        return (h_out, [], x) if return_x else (h_out, [])
     x_r = h.astype(cfg.dtype) @ w_r
     h_out, chk = bk.aggregate(x, x_r)
     if cfg.mode == "split":
         # the backend owns the split check's granularity: generic
         # check_matmul scalars, or per-graph corners on the packed path
-        return h_out, [bk.combination_check(h, w, x, cfg, w_r=w_r), chk]
-    return h_out, [chk]
+        checks = [bk.combination_check(h, w, x, cfg, w_r=w_r), chk]
+    else:
+        checks = [chk]
+    return (h_out, checks, x) if return_x else (h_out, checks)
 
 
 def fold_w_r(params: Params, cfg: ABFTConfig) -> Params:
@@ -137,22 +156,32 @@ def fold_w_r(params: Params, cfg: ABFTConfig) -> Params:
 
 def gcn_forward(params: Params, graph: Graph, cfg: ABFTConfig, *,
                 backend=None, partition=None, return_intermediates=False,
-                **backend_opts) -> Tuple[Array, List[Check]]:
+                return_x=False, **backend_opts) -> Tuple[Array, List[Check]]:
     """Forward pass through all layers; returns (logits, per-layer checks).
 
     The backend is constructed once per call (s_c staged/computed once,
     shared by every layer) — or passed in as an already-built
     :class:`AggregationBackend` instance (the jitted packed serving step
-    builds one from traced arrays).  ReLU between layers breaks the
+    builds one from traced arrays).  For the fused/none check modes the
+    backend's whole-network hook (:meth:`AggregationBackend.network`) is
+    consulted first — the block-ELL backend's ``fused_network`` option
+    runs every layer in one kernel sweep with the activations resident in
+    VMEM; on ``NotImplemented`` the per-layer loop below runs (which in
+    turn consults the per-layer hook).  ReLU between layers breaks the
     checksum chain, so each layer carries its own check — the paper's
-    per-layer fused granularity.  Layers carrying a folded ``w_r``
-    (:func:`fold_w_r`) skip the per-step row_checksum recompute.
+    per-layer fused granularity — on both paths.  Layers carrying a
+    folded ``w_r`` (:func:`fold_w_r`) skip the per-step row_checksum
+    recompute.
 
-    ``return_intermediates=True`` appends a third result: the tuple of
-    every layer's *input* activations (h_layers[0] is h0, h_layers[l] the
-    post-ReLU input to layer l).  The stripe-surgical retry consumes these
-    to re-execute a flagged layer's stripes from the exact operands the
-    faulted pass read.
+    ``return_intermediates=True`` appends a result: the tuple of every
+    layer's *input* activations (h_layers[0] is h0, h_layers[l] the
+    post-ReLU input to layer l) — from the loop for free, or stashed by
+    the whole-network kernel (one extra write per layer, never re-read).
+    The stripe-surgical retry consumes these to re-execute a flagged
+    layer's stripes from the exact operands the faulted pass read.
+    ``return_x=True`` appends one more: the tuple of per-layer
+    combination outputs X (``None`` for layers a fused hook ran), letting
+    the repair replay a two-pass layer's aggregation bit-for-bit.
     """
     if isinstance(backend, AggregationBackend):
         bk = backend
@@ -180,17 +209,36 @@ def gcn_forward(params: Params, graph: Graph, cfg: ABFTConfig, *,
             graph._s_c_dtype = cfg.dtype
             graph._s_c_src = graph.s
     h = graph.h0
-    checks: List[Check] = []
-    h_layers: List[Array] = []
     layers = params["layers"]
+    wrs: Optional[List[Optional[Array]]] = None
+    if cfg.mode != "split":
+        wrs = [_resolve_w_r(layer["w"], layer.get("w_r"), cfg)
+               for layer in layers]
+        net = bk.network(h, [layer["w"] for layer in layers], wrs, cfg,
+                         stash=return_intermediates)
+        if net is not NotImplemented:
+            logits, layer_checks, net_h_layers = net
+            checks = [c for c in layer_checks if c is not None]
+            xs = (None,) * len(layers)
+            if return_intermediates:
+                return ((logits, checks, net_h_layers, xs) if return_x
+                        else (logits, checks, net_h_layers))
+            return (logits, checks, xs) if return_x else (logits, checks)
+    checks = []
+    h_layers: List[Array] = []
+    x_layers: List[Optional[Array]] = []
     for i, layer in enumerate(layers):
         h_layers.append(h)
-        h_out, cs = gcn_layer(bk, h, layer["w"], cfg, w_r=layer.get("w_r"))
+        w_r = wrs[i] if wrs is not None else layer.get("w_r")
+        h_out, cs, x = gcn_layer(bk, h, layer["w"], cfg, w_r=w_r,
+                                 return_x=True)
         checks.extend(cs)
+        x_layers.append(x)
         h = jax.nn.relu(h_out) if i < len(layers) - 1 else h_out
     if return_intermediates:
-        return h, checks, tuple(h_layers)
-    return h, checks
+        return ((h, checks, tuple(h_layers), tuple(x_layers)) if return_x
+                else (h, checks, tuple(h_layers)))
+    return (h, checks, tuple(x_layers)) if return_x else (h, checks)
 
 
 def gcn_apply(params: Params, graph: Graph, cfg: ABFTConfig, *,

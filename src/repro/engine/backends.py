@@ -131,6 +131,29 @@ class AggregationBackend:
         """
         return NotImplemented
 
+    def network(self, h0: Array, ws, wrs, cfg: ABFTConfig, *,
+                stash: bool = False):
+        """Whole-network hook: execute EVERY layer — combination,
+        aggregation, ReLU, and the next layer's combination — in one
+        backend-fused sweep, returning ``(logits, [Check | None] per
+        layer, h_layers | None)``, or ``NotImplemented`` to make the
+        engine run its per-layer loop (which still consults
+        :meth:`layer` for each).
+
+        ``ws``/``wrs`` are the per-layer weights and folded eq.-5
+        columns (``wrs`` all ``None`` when checking is off — the checks
+        stay per-layer and pre-activation either way).  ``stash=True``
+        asks for the per-layer input activations ``h_layers`` (the
+        surgical-repair tiers replay from them); a backend that cannot
+        export them must return ``NotImplemented`` rather than a
+        ``None`` third element when stash is requested.
+
+        Like :meth:`layer`, only consulted for the fused/none modes:
+        the split baseline checks the combination product X itself,
+        which whole-network fusion never materializes.
+        """
+        return NotImplemented
+
     def combination_check(self, h: Array, w: Array, x: Array,
                           cfg: ABFTConfig, *, w_r: Optional[Array] = None
                           ) -> Check:
@@ -227,22 +250,36 @@ class BlockEllBackend(AggregationBackend):
     in one HBM traversal — falling back to the two-pass path above when
     the layer's [f, g] working set exceeds ``vmem_budget``.
 
+    ``fused_network=True`` activates the whole-network hook
+    (:meth:`network`): an entire fused/none-mode forward runs through the
+    ``gcn_network_kernel`` sweep — the activation matrix ping-pongs
+    between two VMEM buffers and never touches HBM — falling back to the
+    per-layer ladder (fused layer, then two-pass) when the depth-wide
+    working set exceeds ``vmem_budget`` or the blocks are not square.
+    ``network_hits``/``network_fallbacks`` count those decisions.
+
     ``granularity="stripe"`` declines every collapse: the kernels' per-
     row-stripe checksum partials stay individual corners ([n_block_rows]
     Check fields), so a detected fault names the stripe it corrupted and
-    the guard's surgical retry re-executes only those rows.  Defaults to
-    ``"graph"`` for packed batches and ``"layer"`` otherwise.
+    the guard's surgical retry re-executes only those rows.
+    ``granularity="slot"`` refines below stripes on the fused kernel
+    paths ([n_block_rows, width] telescope-difference corners naming the
+    exact ell-slot); the two-pass fallback cannot split a stripe's sweep,
+    so it degrades slot corners to stripe corners for that layer.
+    Defaults to ``"graph"`` for packed batches and ``"layer"`` otherwise.
 
-    ``inject=(layer, stripe, slot, delta)`` is the CI fault-injection hook
-    threaded to the fused-layer kernel: the given layer's sweep perturbs
-    one accumulator element mid-flight (requires ``fused_layer=True`` —
-    the two-pass kernel has no accumulator hook).
+    ``inject=(layer, stripe, slot, delta)`` is the CI fault-injection
+    hook: the given layer's aggregation sweep perturbs one accumulator
+    element mid-flight, in whichever kernel runs that layer (whole-
+    network, fused single-layer, or the two-pass spmm — all three carry
+    the hook, so fallback paths are injectable too).
     """
 
     def __init__(self, s: Any, cfg: ABFTConfig, *,
                  s_c: Optional[Array] = None, partition=None,
                  block_g: int = 128, interpret: Optional[bool] = None,
                  fused_layer: bool = False,
+                 fused_network: bool = False,
                  vmem_budget: Optional[int] = None,
                  granularity: Optional[str] = None,
                  inject: Optional[Tuple[int, int, int, float]] = None):
@@ -254,9 +291,12 @@ class BlockEllBackend(AggregationBackend):
         self.interpret = (jax.default_backend() != "tpu"
                           if interpret is None else interpret)
         self.fused_layer = fused_layer
+        self.fused_network = fused_network
         self.vmem_budget = vmem_budget
         self.fused_hits = 0
         self.fused_fallbacks = 0
+        self.network_hits = 0
+        self.network_fallbacks = 0
         self.segments = None
         self.n_slots = None
         packed = isinstance(s, PackedGraphs)
@@ -287,16 +327,18 @@ class BlockEllBackend(AggregationBackend):
         # packed batches must stay at least graph-attributable (the guard's
         # per-graph retry reads per-graph corners); single systems have no
         # graph segmentation to offer
-        supported = ("graph", "stripe") if packed else ("layer", "stripe")
+        supported = (("graph", "stripe", "slot") if packed
+                     else ("layer", "stripe", "slot"))
+        if granularity == "slot" and self.partition is not None:
+            raise ValueError(
+                "granularity='slot' is not plumbed through the sharded "
+                "path (sharded_gcn_fused collapses each shard's partials "
+                "before the psum) — use granularity='stripe' there")
         self.granularity = _validate_granularity("block_ell", granularity,
                                                  supported)
 
     def _set_inject(self, inject):
         if inject is not None:
-            if not self.fused_layer:
-                raise ValueError("inject= needs fused_layer=True (the "
-                                 "accumulator hook lives in the gcn_fused "
-                                 "kernel; the two-pass kernel has none)")
             if self.partition is not None:
                 raise ValueError("inject= is not plumbed through the "
                                  "sharded path (sharded_gcn_fused runs the "
@@ -314,6 +356,7 @@ class BlockEllBackend(AggregationBackend):
     def from_staged(cls, cols: Array, vals: Array, segments: Array,
                     n_slots: int, cfg: ABFTConfig, *, block_g: int = 128,
                     interpret: bool = False, fused_layer: bool = False,
+                    fused_network: bool = False,
                     vmem_budget: Optional[int] = None,
                     granularity: Optional[str] = None,
                     inject: Optional[Tuple[int, int, int, float]] = None
@@ -331,9 +374,12 @@ class BlockEllBackend(AggregationBackend):
         bk.partition = None
         bk.interpret = interpret
         bk.fused_layer = fused_layer
+        bk.fused_network = fused_network
         bk.vmem_budget = vmem_budget
         bk.fused_hits = 0
         bk.fused_fallbacks = 0
+        bk.network_hits = 0
+        bk.network_fallbacks = 0
         bk.bell = None
         bk.cols, bk.vals = cols, vals
         bk.segments = segments
@@ -388,8 +434,55 @@ class BlockEllBackend(AggregationBackend):
                                  granularity=self.granularity,
                                  interpret=self.interpret)
 
+    def network(self, h0, ws, wrs, cfg, *, stash=False):
+        """Whole-network fusion (``kernels/gcn_fused``'s network kernel):
+        every layer's combination + aggregation + ReLU runs in one sweep
+        with the activation matrix ping-ponging between two VMEM buffers —
+        it never touches HBM — and the eq.-5 column carried across each
+        layer boundary, so the checks stay per-layer and pre-activation.
+
+        Falls back to the per-layer ladder (returns ``NotImplemented``)
+        when the option is off, the operand is sharded or non-square, or
+        the depth-wide working set (ping-pong buffers at the shared
+        lane-rounded max width) exceeds the VMEM budget.
+        """
+        if not self.fused_network or self.partition is not None:
+            return NotImplemented
+        from repro.kernels.gcn_fused.ops import (
+            FUSED_VMEM_BUDGET,
+            fused_network_fits,
+            gcn_network_layer,
+            gcn_network_packed,
+        )
+        nbm, _width, bm, bk_ = self.vals.shape
+        dims = [int(ws[0].shape[0])] + [int(w.shape[1]) for w in ws]
+        budget = FUSED_VMEM_BUDGET if self.vmem_budget is None \
+            else self.vmem_budget
+        if bm != bk_ or not fused_network_fits(dims, bm, nbm * bm,
+                                               block_g=self.block_g,
+                                               budget=budget):
+            self.network_fallbacks += 1
+            return NotImplemented
+        self.network_hits += 1
+        self._layer_calls += len(ws)     # the sweep consumed every layer
+        if self.segments is not None:
+            return gcn_network_packed(self.cols, self.vals, h0, ws, wrs,
+                                      self.segments,
+                                      num_segments=self.n_slots,
+                                      block_g=self.block_g,
+                                      granularity=self.granularity,
+                                      interpret=self.interpret,
+                                      inject=self.inject, stash_acts=stash)
+        return gcn_network_layer(self.bell, h0, ws, wrs,
+                                 block_g=self.block_g,
+                                 granularity=self.granularity,
+                                 interpret=self.interpret,
+                                 inject=self.inject, stash_acts=stash)
+
     def combination_check(self, h, w, x, cfg, *, w_r=None):
-        if self.granularity == "stripe":
+        if self.granularity in ("stripe", "slot"):
+            # slot corners need the fused kernels' telescopes; split mode's
+            # two-pass combination check localizes at stripe granularity
             # per-stripe eq. 2–3 corners: rows group by stripe (row ->
             # stripe is just a reshape), matching the aggregate corner's
             # [n_block_rows] shape so split mode localizes too
@@ -430,24 +523,32 @@ class BlockEllBackend(AggregationBackend):
             raise ValueError("block_ell backend is single-graph ([n, g]); "
                              "batch via engine.batching or the dense backend")
         xr_col = None if x_r is None else x_r.astype(jnp.float32)[:, None]
+        # the two-pass kernel cannot split a stripe's ell-sweep into slot
+        # corners; slot-granularity layers that fall through to this path
+        # degrade to stripe corners (still surgical, one rung coarser)
+        gran = "stripe" if self.granularity == "slot" else self.granularity
+        inject = None
+        if self.inject is not None and self._layer_calls == self.inject[0]:
+            inject = tuple(self.inject[1:])
+        self._layer_calls += 1
         if self.segments is not None:
             from repro.kernels.spmm_abft.ops import spmm_abft_packed
             return spmm_abft_packed(self.cols, self.vals, x, xr_col,
                                     self.segments, num_segments=self.n_slots,
                                     block_g=self.block_g,
-                                    granularity=self.granularity,
-                                    interpret=self.interpret)
+                                    granularity=gran,
+                                    interpret=self.interpret, inject=inject)
         from repro.kernels.spmm_abft.ops import spmm_abft
         if self.partition is None:
             out, chk = spmm_abft(self.bell, x, xr_col, block_g=self.block_g,
-                                 granularity=self.granularity,
-                                 interpret=self.interpret,
+                                 granularity=gran,
+                                 interpret=self.interpret, inject=inject,
                                  _staged=(self.cols, self.vals))
             return out, (chk if x_r is not None else None)
         from .sharded import sharded_spmm_abft
         return sharded_spmm_abft(
             self.bell, self.cols, self.vals, x, xr_col, self.partition,
-            block_g=self.block_g, granularity=self.granularity,
+            block_g=self.block_g, granularity=gran,
             interpret=self.interpret)
 
 

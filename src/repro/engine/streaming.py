@@ -54,7 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.abft import ABFTConfig, per_graph_report, \
-    per_stripe_report, summarize
+    per_slot_report, per_stripe_report, summarize
 from repro.engine.api import Graph, fold_w_r, gcn_forward
 from repro.engine.backends import BlockEllBackend
 from repro.engine.batching import GraphBatch, PackedGraphs, \
@@ -92,6 +92,8 @@ def make_packed_serve_step(params, cfg: ABFTConfig, n_slots: int, *,
                            block_g: int = 128,
                            interpret: Optional[bool] = None,
                            fused_layer: bool = False,
+                           fused_network: bool = False,
+                           vmem_budget: Optional[int] = None,
                            granularity: str = "graph",
                            inject=None):
     """Jitted (cols, vals, segments, h0) -> (logits, metrics) packed step.
@@ -101,18 +103,29 @@ def make_packed_serve_step(params, cfg: ABFTConfig, n_slots: int, *,
     epilogue's per-graph corners feed both the replicated report and the
     per-graph verdict vector.  ``fused_layer=True`` runs each layer through
     the single-pass gcn_fused kernel (combination + aggregation + check in
-    one HBM traversal) instead of the two-pass combination-then-spmm path.
+    one HBM traversal) instead of the two-pass combination-then-spmm path;
+    ``fused_network=True`` goes further and runs the WHOLE forward in one
+    sweep (``gcn_network_kernel``) with the activations resident in VMEM,
+    falling back to the per-layer ladder when the depth-wide working set
+    exceeds ``vmem_budget``.
 
     ``granularity="stripe"`` keeps the per-row-stripe corners: the metrics
     gain ``abft_stripe_flags`` / ``abft_stripe_max_rel`` ([checks,
     n_stripes] verdicts, the per-graph vector now segment-reduced from
-    them) and ``abft_h_layers`` (every layer's input activations) — the
-    operands the guard's surgical stripe retry needs.  ``inject`` is the
-    benchmark/CI accumulator fault hook, ``(layer, stripe, slot, delta)``
-    threaded to the fused kernel (requires ``fused_layer=True``).
+    them), ``abft_h_layers`` (every layer's input activations — stashed by
+    the network kernel when it runs), and ``abft_x_layers`` (two-pass
+    layers' combination outputs, for the bit-for-bit spmm replay) — the
+    operands the guard's surgical tiers need.  ``granularity="slot"``
+    refines to per-(stripe, ell-slot) telescope corners on the fused
+    kernel paths, adding ``abft_slot_flags`` / ``abft_slot_max_rel``
+    ([checks, n_stripes, width]); two-pass fallback layers degrade to
+    stripe corners and contribute all-False slot slabs.  ``inject`` is the
+    benchmark/CI accumulator fault hook, ``(layer, stripe, slot, delta)``,
+    honoured by all three kernels.
     """
     interpret = (jax.default_backend() != "tpu" if interpret is None
                  else interpret)
+    want_localize = granularity in ("stripe", "slot")
 
     @jax.jit
     def step(cols, vals, segments, h0):
@@ -120,22 +133,36 @@ def make_packed_serve_step(params, cfg: ABFTConfig, n_slots: int, *,
                                          block_g=block_g,
                                          interpret=interpret,
                                          fused_layer=fused_layer,
+                                         fused_network=fused_network,
+                                         vmem_budget=vmem_budget,
                                          granularity=granularity,
                                          inject=inject)
-        logits, checks, h_layers = gcn_forward(
-            params, Graph(s=None, h0=h0), cfg, backend=bk,
-            return_intermediates=True)
+        if want_localize:
+            logits, checks, h_layers, x_layers = gcn_forward(
+                params, Graph(s=None, h0=h0), cfg, backend=bk,
+                return_intermediates=True, return_x=True)
+        else:
+            # no surgical tier to feed: skip the operand stashes (the
+            # network kernel then runs its pure one-traversal form)
+            logits, checks = gcn_forward(
+                params, Graph(s=None, h0=h0), cfg, backend=bk)
         report = summarize(checks, cfg)
         metrics = {"abft_flag": report.flag,
                    "abft_max_rel": report.max_rel,
                    "abft_n_checks": report.n_checks}
-        if granularity == "stripe":
+        if want_localize:
             gflags, grel = per_graph_report(checks, cfg, n_slots,
                                             segments=segments)
             sflags, srel = per_stripe_report(checks, cfg, vals.shape[0])
             metrics.update(abft_stripe_flags=sflags,
                            abft_stripe_max_rel=srel,
-                           abft_h_layers=h_layers)
+                           abft_h_layers=h_layers,
+                           abft_x_layers=x_layers)
+            if granularity == "slot":
+                slflags, slrel = per_slot_report(checks, cfg, vals.shape[0],
+                                                 vals.shape[1])
+                metrics.update(abft_slot_flags=slflags,
+                               abft_slot_max_rel=slrel)
         else:
             gflags, grel = per_graph_report(checks, cfg, n_slots)
         metrics.update(abft_graph_flags=gflags, abft_graph_max_rel=grel)
@@ -164,10 +191,14 @@ class PackedRunner:
     """
 
     def __init__(self, params, cfg: ABFTConfig, block_g: int,
-                 fused_layer: bool = False, granularity: str = "graph"):
+                 fused_layer: bool = False, granularity: str = "graph",
+                 fused_network: bool = False,
+                 vmem_budget: Optional[int] = None):
         self.params, self.cfg = params, cfg
         self.block_g = block_g
         self.fused_layer = fused_layer
+        self.fused_network = fused_network
+        self.vmem_budget = vmem_budget
         self.granularity = granularity
         self._steps = {}
 
@@ -178,12 +209,59 @@ class PackedRunner:
     def step_for(self, pb: PackedGraphs):
         key = (pb.bell.values.shape, pb.h0.shape, pb.n_slots)
         if key not in self._steps:
-            if self.fused_layer:
+            if self.fused_layer or self.fused_network:
                 self._warn_fallbacks(pb)
             self._steps[key] = make_packed_serve_step(
                 self.params, self.cfg, pb.n_slots, block_g=self.block_g,
-                fused_layer=self.fused_layer, granularity=self.granularity)
+                fused_layer=self.fused_layer,
+                fused_network=self.fused_network,
+                vmem_budget=self.vmem_budget,
+                granularity=self.granularity)
         return self._steps[key]
+
+    def _budget(self) -> int:
+        from repro.kernels.gcn_fused.ops import FUSED_VMEM_BUDGET
+        return FUSED_VMEM_BUDGET if self.vmem_budget is None \
+            else self.vmem_budget
+
+    def _network_dims(self) -> list:
+        layers = self.params["layers"]
+        return ([int(layers[0]["w"].shape[0])]
+                + [int(layer["w"].shape[1]) for layer in layers])
+
+    def fusion_counts(self, pb: PackedGraphs) -> Dict[str, int]:
+        """Per-batch fusion decisions, recomputed eagerly from the SAME
+        static shape predicates the backend evaluates at trace time — the
+        backend's own counters tick once per compile (the decision is
+        trace-time), which under-reports a serving run where every batch
+        takes the decision.  One whole-network hit subsumes the per-layer
+        decisions; a network fallback drops to the per-layer ladder, whose
+        hit/fallback split is evaluated layer by layer."""
+        from repro.kernels.gcn_fused.ops import fused_layer_fits, \
+            fused_network_fits
+
+        counts = {"fused_hits": 0, "fused_fallbacks": 0,
+                  "network_hits": 0, "network_fallbacks": 0}
+        if self.cfg.mode == "split":
+            return counts
+        nbm, _w, bm, bk = pb.bell.values.shape
+        if self.fused_network:
+            if bm == bk and fused_network_fits(self._network_dims(), bm,
+                                               nbm * bm,
+                                               block_g=self.block_g,
+                                               budget=self._budget()):
+                counts["network_hits"] = 1
+                return counts
+            counts["network_fallbacks"] = 1
+        if self.fused_layer:
+            for layer in self.params["layers"]:
+                if fused_layer_fits(*layer["w"].shape, bm, bk,
+                                    block_g=self.block_g,
+                                    budget=self._budget()):
+                    counts["fused_hits"] += 1
+                else:
+                    counts["fused_fallbacks"] += 1
+        return counts
 
     def _warn_fallbacks(self, pb: PackedGraphs):
         """The VMEM-budget decision happens at trace time inside the jitted
@@ -191,12 +269,27 @@ class PackedRunner:
         once per packed shape, from the layer widths we already know."""
         import warnings
 
-        from repro.kernels.gcn_fused.ops import fused_layer_fits
+        from repro.kernels.gcn_fused.ops import fused_layer_fits, \
+            fused_network_fits
 
-        bm, bk = pb.bell.values.shape[2:4]
+        nbm, _w, bm, bk = pb.bell.values.shape
+        if self.fused_network:
+            if bm == bk and fused_network_fits(self._network_dims(), bm,
+                                               nbm * bm,
+                                               block_g=self.block_g,
+                                               budget=self._budget()):
+                return          # whole network fused; nothing falls back
+            warnings.warn(
+                "--fused-network: the depth-wide working set (activation "
+                "ping-pong buffers at the shared max width) exceeds the "
+                "VMEM budget for this packed shape; the batch runs the "
+                "per-layer ladder instead")
+        if not self.fused_layer:
+            return
         wide = [tuple(layer["w"].shape) for layer in self.params["layers"]
                 if not fused_layer_fits(*layer["w"].shape, bm, bk,
-                                        block_g=self.block_g)]
+                                        block_g=self.block_g,
+                                        budget=self._budget())]
         if wide:
             warnings.warn(
                 f"--fused-layer: layer widths {wide} exceed the fused VMEM "
@@ -272,6 +365,18 @@ class PackedRunner:
             return surgical_stripe_retry(pb, self.params, self.cfg, out,
                                          metrics, block_g=self.block_g)
         return sretry
+
+    def slot_retry_fn(self, pb: PackedGraphs):
+        """Finest tier: repair from the per-(stripe, slot) telescope
+        corners with row-level downstream propagation
+        (``engine.localize.surgical_slot_retry``); the guard escalates to
+        the stripe tier when the repair cannot be verified."""
+        from repro.engine.localize import surgical_slot_retry
+
+        def slretry(out, metrics):
+            return surgical_slot_retry(pb, self.params, self.cfg, out,
+                                       metrics, block_g=self.block_g)
+        return slretry
 
 
 def dense_retry_fn(step, b: GraphBatch):
@@ -431,15 +536,17 @@ class StreamingEngine:
                  oversize_policy: str = "singleton",
                  block_g: Optional[int] = None,
                  fused_layer: bool = False,
+                 fused_network: bool = False,
+                 vmem_budget: Optional[int] = None,
                  granularity: str = "graph",
                  keep_logits: bool = True,
                  clock: Callable[[], float] = time.perf_counter):
         if oversize_policy not in ("singleton", "reject"):
             raise ValueError(f"oversize_policy {oversize_policy!r} not in "
                              f"('singleton', 'reject')")
-        if granularity not in ("graph", "stripe"):
+        if granularity not in ("graph", "stripe", "slot"):
             raise ValueError(f"granularity {granularity!r} not in "
-                             f"('graph', 'stripe')")
+                             f"('graph', 'stripe', 'slot')")
         if queue_capacity < 1:
             raise ValueError("queue_capacity must be >= 1")
         self.cfg = cfg
@@ -448,7 +555,9 @@ class StreamingEngine:
         self.runner = PackedRunner(self.params, cfg,
                                    rungs.block if block_g is None
                                    else block_g,
-                                   fused_layer, granularity)
+                                   fused_layer, granularity,
+                                   fused_network=fused_network,
+                                   vmem_budget=vmem_budget)
         self.guard = guard if guard is not None else ABFTGuard()
         self.queue_capacity = queue_capacity
         self.flush_deadline = flush_deadline
@@ -468,6 +577,10 @@ class StreamingEngine:
         self.rejected_oversize = 0
         self.singleton_dispatches = 0
         self.batches_dispatched = 0
+        self.fused_hits = 0
+        self.fused_fallbacks = 0
+        self.network_hits = 0
+        self.network_fallbacks = 0
 
     # -- intake ------------------------------------------------------------
 
@@ -616,6 +729,8 @@ class StreamingEngine:
         for rid in rids:
             self._results[rid].t_dispatch = t
         self.batches_dispatched += 1
+        for key, n in self.runner.fusion_counts(pb).items():
+            setattr(self, key, getattr(self, key) + n)
         self._inflight = (pb, out, metrics, rids)
 
     def _resolve_inflight(self) -> None:
@@ -624,11 +739,13 @@ class StreamingEngine:
         pb, out, metrics, rids = self._inflight
         self._inflight = None
         stripe_retry = (self.runner.stripe_retry_fn(pb)
-                        if self.granularity == "stripe" else None)
+                        if self.granularity in ("stripe", "slot") else None)
+        slot_retry = (self.runner.slot_retry_fn(pb)
+                      if self.granularity == "slot" else None)
         step = self.runner.step_for(pb)
         out, metrics = self.guard.adjudicate(
             out, metrics, self.runner.retry_fn(pb),
-            stripe_retry_fn=stripe_retry,
+            stripe_retry_fn=stripe_retry, slot_retry_fn=slot_retry,
             replay=(step, packed_step_args(pb)))
         t = self.clock()
         out = np.asarray(out)
@@ -687,4 +804,8 @@ class StreamingEngine:
             "graphs_per_sec": len(served) / span if span > 0 else None,
             "guard_flags": self.guard.flags,
             "guard_retries": self.guard.retries,
+            "fused_hits": self.fused_hits,
+            "fused_fallbacks": self.fused_fallbacks,
+            "network_hits": self.network_hits,
+            "network_fallbacks": self.network_fallbacks,
         }

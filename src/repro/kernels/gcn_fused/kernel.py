@@ -46,9 +46,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _make_kernel(inject: Optional[Tuple[int, int, float]], with_check: bool):
-    def _kernel(cols_ref, s_ref, h_ref, w_ref, wr_ref,
-                out_ref, sums_ref, extra_ref, acc_ref, ex_ref):
+def _make_kernel(inject: Optional[Tuple[int, int, float]], with_check: bool,
+                 with_slots: bool):
+    def _kernel(cols_ref, s_ref, h_ref, w_ref, wr_ref, out_ref, sums_ref,
+                extra_ref, *rest):
+        if with_slots:
+            sacts_ref, spreds_ref, acc_ref, ex_ref = rest
+        else:
+            acc_ref, ex_ref = rest
         j = pl.program_id(1)
         nj = pl.num_programs(1)
 
@@ -75,6 +80,15 @@ def _make_kernel(inject: Optional[Tuple[int, int, float]], with_check: bool):
             def _inject():
                 acc_ref[0, 0] += jnp.float32(delta)
 
+        if with_slots:
+            # telescoped running sums, recorded AFTER the inject hook: slot
+            # corner j is the adjacent difference sacts[j] - sacts[j-1], so
+            # an accumulator fault between two recordings lands in exactly
+            # one slot's corner while the final value stays Σ acc — per-slot
+            # sums built from tile products alone would miss it
+            sacts_ref[0, j] = jnp.sum(acc_ref[...])
+            spreds_ref[0, j] = jnp.sum(ex_ref[...])
+
         @pl.when(j == nj - 1)
         def _epilogue():
             acc = acc_ref[...]
@@ -86,21 +100,41 @@ def _make_kernel(inject: Optional[Tuple[int, int, float]], with_check: bool):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("interpret", "inject", "with_check"))
+                   static_argnames=("interpret", "inject", "with_check",
+                                    "with_slots"))
 def gcn_fused_kernel(block_cols: jax.Array, values: jax.Array, h: jax.Array,
                      w: jax.Array, wr: jax.Array, *, interpret: bool = False,
                      inject: Optional[Tuple[int, int, float]] = None,
-                     with_check: bool = True):
+                     with_check: bool = True, with_slots: bool = False):
     """block_cols: [nbm, width] i32; values: [nbm, width, bm, bk];
     h: [K, F]; w: [F, G]; wr: [F, 1].  K must be a bk multiple covering
     max(block_cols)+1 stripes; F and G lane-padded by the caller (ops.py).
     ``with_check=False`` (mode="none") statically elides the per-tile
     eq.-5 dots; the tiny extra output is then all-zero.
-    Returns (out [nbm*bm, G], stripe_sums [nbm, 1], extra [nbm*bm, 1])."""
+    Returns (out [nbm*bm, G], stripe_sums [nbm, 1], extra [nbm*bm, 1]);
+    ``with_slots=True`` appends the telescoped per-slot running sums
+    (slot_acts [nbm, width], slot_preds [nbm, width]) for slot-granular
+    corners (``ops.slot_check_corners``)."""
     nbm, width, bm, bk = values.shape
     k, f = h.shape
     fw, g = w.shape
     assert k % bk == 0 and fw == f and wr.shape == (f, 1)
+
+    out_specs = [
+        pl.BlockSpec((bm, g), lambda i, j, cols: (i, 0)),
+        pl.BlockSpec((1, 1), lambda i, j, cols: (i, 0)),
+        pl.BlockSpec((bm, 1), lambda i, j, cols: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((nbm * bm, g), h.dtype),
+        jax.ShapeDtypeStruct((nbm, 1), jnp.float32),
+        jax.ShapeDtypeStruct((nbm * bm, 1), jnp.float32),
+    ]
+    if with_slots:
+        out_specs += [pl.BlockSpec((1, width), lambda i, j, cols: (i, 0)),
+                      pl.BlockSpec((1, width), lambda i, j, cols: (i, 0))]
+        out_shape += [jax.ShapeDtypeStruct((nbm, width), jnp.float32),
+                      jax.ShapeDtypeStruct((nbm, width), jnp.float32)]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -111,23 +145,195 @@ def gcn_fused_kernel(block_cols: jax.Array, values: jax.Array, h: jax.Array,
             pl.BlockSpec((f, g), lambda i, j, cols: (0, 0)),
             pl.BlockSpec((f, 1), lambda i, j, cols: (0, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((bm, g), lambda i, j, cols: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i, j, cols: (i, 0)),
-            pl.BlockSpec((bm, 1), lambda i, j, cols: (i, 0)),
-        ],
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((bm, g), jnp.float32),
             pltpu.VMEM((bm, 1), jnp.float32),
         ],
     )
     return pl.pallas_call(
-        _make_kernel(inject, with_check),
+        _make_kernel(inject, with_check, with_slots),
         grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((nbm * bm, g), h.dtype),
-            jax.ShapeDtypeStruct((nbm, 1), jnp.float32),
-            jax.ShapeDtypeStruct((nbm * bm, 1), jnp.float32),
-        ],
+        out_shape=out_shape,
         interpret=interpret,
     )(block_cols, values, h, w, wr)
+
+
+# ---------------------------------------------------------------------------
+# Whole-network kernel: an L-layer GCN in ONE HBM traversal.
+# ---------------------------------------------------------------------------
+
+def _make_network_kernel(n_layers: int, bm: int,
+                         inject: Optional[Tuple[int, int, int, float]],
+                         with_check: bool, stash_acts: bool):
+    def _kernel(cols_ref, s_ref, h0_ref, w_ref, wr_ref, out_ref, tacts_ref,
+                tpreds_ref, acts_ref, *rest):
+        if n_layers > 1:
+            acta_ref, actb_ref, acc_ref, ex_ref = rest
+        else:
+            acc_ref, ex_ref = rest
+        ell = pl.program_id(0)
+        i = pl.program_id(1)
+        j = pl.program_id(2)
+        nj = pl.num_programs(2)
+
+        @pl.when(j == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            ex_ref[...] = jnp.zeros_like(ex_ref)
+
+        s = s_ref[0, 0]
+        w = w_ref[0]
+        if n_layers > 1:
+            # layer ell reads the resident activations the previous layer
+            # wrote to buffer (ell-1) % 2; layer 0 streams H0 from HBM.
+            # Both VMEM loads are issued and the right one selected —
+            # cheaper than predicated control flow, and the unselected
+            # buffer's (possibly uninitialized) values never propagate.
+            c = cols_ref[i, j]
+            ha = acta_ref[pl.ds(c * bm, bm), :]
+            hb = actb_ref[pl.ds(c * bm, bm), :]
+            h_res = jnp.where((ell % 2) == 1, ha, hb)
+            h = jnp.where(ell == 0, h0_ref[...], h_res)
+        else:
+            h = h0_ref[...]
+        x = jnp.dot(h, w, preferred_element_type=jnp.float32)
+        acc_ref[...] += jnp.dot(s, x, preferred_element_type=jnp.float32)
+        if with_check:
+            xr = jnp.dot(h, wr_ref[0], preferred_element_type=jnp.float32)
+            ex_ref[...] += jnp.dot(s, xr, preferred_element_type=jnp.float32)
+
+        if inject is not None:
+            il, ii, jj, delta = inject
+
+            @pl.when((ell == il) & (i == ii) & (j == jj))
+            def _inject():
+                acc_ref[0, 0] += jnp.float32(delta)
+
+        # telescoped per-slot running sums (see _make_kernel): the slot
+        # corners certify each layer pre-activation, exactly as the
+        # sequential per-layer sweep would
+        tacts_ref[0, 0, j] = jnp.sum(acc_ref[...])
+        tpreds_ref[0, 0, j] = jnp.sum(ex_ref[...])
+
+        last = j == nj - 1
+
+        @pl.when(last & (ell == n_layers - 1))
+        def _write_out():
+            out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+        if n_layers > 1:
+            # ReLU in the epilogue, result kept VMEM-resident for the next
+            # layer's combination (ping-pong: layer ell writes buffer
+            # ell % 2).  All stripes of layer ell complete before layer
+            # ell+1 starts (layer is the slowest grid axis), so the
+            # write-while-read race cannot occur across the buffers.
+            @pl.when(last & (ell < n_layers - 1) & (ell % 2 == 0))
+            def _store_a():
+                acta_ref[pl.ds(i * bm, bm), :] = \
+                    jnp.maximum(acc_ref[...], 0.0)
+
+            @pl.when(last & (ell < n_layers - 1) & (ell % 2 == 1))
+            def _store_b():
+                actb_ref[pl.ds(i * bm, bm), :] = \
+                    jnp.maximum(acc_ref[...], 0.0)
+
+        if stash_acts:
+            # repairability stash: the post-ReLU activations also go to HBM
+            # (one write per slab, never re-read by this sweep) so the
+            # surgical tiers can recompute flagged stripes offline.  The
+            # final layer's slab records relu(logits) — sliced off by ops.
+            @pl.when(last)
+            def _stash():
+                acts_ref[0] = jnp.maximum(acc_ref[...], 0.0)
+
+    return _kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "inject", "with_check",
+                                    "stash_acts"))
+def gcn_network_kernel(block_cols: jax.Array, values: jax.Array,
+                       h0: jax.Array, ws: jax.Array, wrs: jax.Array, *,
+                       interpret: bool = False,
+                       inject: Optional[Tuple[int, int, int, float]] = None,
+                       with_check: bool = True, stash_acts: bool = False):
+    """An L-layer GCN  H_{l+1} = relu(S (H_l W_l))  in one grid sweep.
+
+    block_cols: [nbm, width] i32; values: [nbm, width, bm, bm] (square
+    blocks — activations are indexed by the same table on both axes);
+    h0: [K, P] with K == nbm*bm (every referenced column block is also an
+    output stripe); ws: [L, P, P]; wrs: [L, P, 1].  P is ONE shared
+    lane-padded width — the max over all layer widths, zero-padded, so the
+    activation matrix ping-pongs between two fixed [K, P] VMEM buffers and
+    NEVER touches HBM (zero columns stay zero through relu and through the
+    zero-padded weight rows, so padding is exact at every depth).
+
+    grid (layer, row-stripe, ell-slot), layer slowest: all stripes of
+    layer l finish before layer l+1 reads them.  W_l / w_r,l are DMA'd once
+    per layer (index map (l, 0, 0)) and resident across its stripes; the
+    final logits are written once (out block index pins to 0 until the
+    last layer).  ``inject=(layer, stripe, slot, delta)`` is the fault
+    hook; ``stash_acts=True`` additionally writes each layer's post-ReLU
+    slab to HBM for the surgical-repair tiers (the one-traversal byte
+    model gains L slab writes but still never re-reads them).
+
+    Returns (out [K, P], tele_acts [L, nbm, width],
+    tele_preds [L, nbm, width], acts [L, K, P] | [1, bm, P] garbage when
+    not stashing)."""
+    nbm, width, bm, bk = values.shape
+    k, p = h0.shape
+    n_layers, pw, pw2 = ws.shape
+    assert bm == bk, "network kernel needs square blocks"
+    assert k == nbm * bm, "h0 rows must equal the padded stripe rows"
+    assert pw == p and pw2 == p and wrs.shape == (n_layers, p, 1)
+    nl = n_layers
+
+    out_specs = [
+        pl.BlockSpec((bm, p),
+                     lambda l, i, j, cols: (jnp.where(l == nl - 1, i, 0), 0)),
+        pl.BlockSpec((1, 1, width), lambda l, i, j, cols: (l, i, 0)),
+        pl.BlockSpec((1, 1, width), lambda l, i, j, cols: (l, i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((k, p), h0.dtype),
+        jax.ShapeDtypeStruct((nl, nbm, width), jnp.float32),
+        jax.ShapeDtypeStruct((nl, nbm, width), jnp.float32),
+    ]
+    if stash_acts:
+        out_specs.append(pl.BlockSpec((1, bm, p),
+                                      lambda l, i, j, cols: (l, i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((nl, k, p), jnp.float32))
+    else:
+        out_specs.append(pl.BlockSpec((1, bm, p),
+                                      lambda l, i, j, cols: (0, 0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((1, bm, p), jnp.float32))
+
+    scratch = []
+    if n_layers > 1:
+        scratch += [pltpu.VMEM((k, p), jnp.float32),
+                    pltpu.VMEM((k, p), jnp.float32)]
+    scratch += [pltpu.VMEM((bm, p), jnp.float32),
+                pltpu.VMEM((bm, 1), jnp.float32)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_layers, nbm, width),
+        in_specs=[
+            pl.BlockSpec((1, 1, bm, bk),
+                         lambda l, i, j, cols: (i, j, 0, 0)),
+            pl.BlockSpec((bk, p),
+                         lambda l, i, j, cols:
+                         (jnp.where(l == 0, cols[i, j], 0), 0)),
+            pl.BlockSpec((1, p, p), lambda l, i, j, cols: (l, 0, 0)),
+            pl.BlockSpec((1, p, 1), lambda l, i, j, cols: (l, 0, 0)),
+        ],
+        out_specs=out_specs,
+        scratch_shapes=scratch,
+    )
+    return pl.pallas_call(
+        _make_network_kernel(n_layers, bm, inject, with_check, stash_acts),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(block_cols, values, h0, ws, wrs)

@@ -8,7 +8,7 @@ engine default do).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +23,7 @@ from repro.kernels.spmm_abft.ops import (
     validate_packed_operands,
 )
 
-from .kernel import gcn_fused_kernel
+from .kernel import gcn_fused_kernel, gcn_network_kernel
 
 Array = jax.Array
 
@@ -75,6 +75,24 @@ def prepare_fused_operands(bell: BlockEll, h: Array, w: Array,
     return hp, wp, wrp
 
 
+def slot_check_corners(slot_acts: Array, slot_preds: Array) -> Check:
+    """Telescoped per-slot running sums -> one eq.-6 corner PER (stripe,
+    ell-slot) grid step — the finest granularity the sweep itself has.
+
+    The kernel records Σ acc and Σ ex after every slot; the slot corner is
+    the adjacent difference along the slot axis.  Telescoping is what makes
+    detection exact: an accumulator upset between two recordings shifts
+    every later running sum by the same delta, so exactly one difference
+    diverges — per-slot sums rebuilt from tile products would miss faults
+    that corrupt the accumulator itself.  On a clean run each difference is
+    bounded by twice the stripe-level f32 noise (both running sums are
+    valid partial-sweep eq.-6 comparisons by linearity)."""
+    zeros = jnp.zeros((slot_acts.shape[0], 1), slot_acts.dtype)
+    return Check(predicted=jnp.diff(slot_preds, axis=1, prepend=zeros),
+                 actual=jnp.diff(slot_acts, axis=1, prepend=zeros),
+                 granularity="slot")
+
+
 def gcn_fused_layer(bell: BlockEll, h: Array, w: Array,
                     w_r: Optional[Array] = None, *, block_g: int = 128,
                     interpret: bool = False,
@@ -101,14 +119,17 @@ def gcn_fused_layer(bell: BlockEll, h: Array, w: Array,
     g = w.shape[1]
     cols, vals = _staged if _staged is not None else device_block_ell(bell)
     want_check = w_r is not None
+    with_slots = want_check and granularity == "slot"
     hp, wp, wrp = prepare_fused_operands(bell, h, w, w_r, block_g)
-    out, stripe_sums, extra = gcn_fused_kernel(cols, vals, hp, wp, wrp,
-                                               interpret=interpret,
-                                               inject=inject,
-                                               with_check=want_check)
+    res = gcn_fused_kernel(cols, vals, hp, wp, wrp, interpret=interpret,
+                           inject=inject, with_check=want_check,
+                           with_slots=with_slots)
+    out, stripe_sums, extra = res[:3]
     out = out[:n, :g]
     if not want_check:
         return out, None
+    if with_slots:
+        return out, slot_check_corners(res[3], res[4])
     if granularity == "stripe":
         return out, stripe_check_corners(stripe_sums, extra)
     return out, Check(predicted=extra[:n, 0].sum(),
@@ -135,19 +156,173 @@ def gcn_fused_packed(cols: Array, vals: Array, h: Array, w: Array,
     validate_packed_operands(vals, h.shape[0], "h")
     g = w.shape[1]
     want_check = w_r is not None
+    with_slots = want_check and granularity == "slot"
     hp = _pad_axis(h, 1, block_g)
     wp, wrp = _pad_weights(w, w_r, block_g)
-    out, stripe_sums, extra = gcn_fused_kernel(cols, vals, hp, wp, wrp,
-                                               interpret=interpret,
-                                               inject=inject,
-                                               with_check=want_check)
+    res = gcn_fused_kernel(cols, vals, hp, wp, wrp, interpret=interpret,
+                           inject=inject, with_check=want_check,
+                           with_slots=with_slots)
+    out, stripe_sums, extra = res[:3]
     out = out[:, :g]
     if not want_check:
         return out, None
+    if with_slots:
+        return out, slot_check_corners(res[3], res[4])
     if granularity == "stripe":
         return out, stripe_check_corners(stripe_sums, extra)
     return out, packed_check_corners(stripe_sums, extra, segments,
                                      num_segments)
+
+
+# ---------------------------------------------------------------------------
+# Whole-network fusion: L layers in ONE HBM traversal.
+# ---------------------------------------------------------------------------
+
+def _network_weight_stacks(ws: Sequence[Array],
+                           wrs: Sequence[Optional[Array]], block_g: int
+                           ) -> Tuple[Array, Array, int, List[int]]:
+    """Pad every layer's W / w_r to ONE shared lane-rounded width P (the max
+    over all layer widths) and stack to [L, P, P] / [L, P, 1].  One shared P
+    is what lets the activation matrix live in two fixed VMEM buffers
+    across the whole depth; the zero padding is exact at every layer
+    (zero activation columns meet zero weight rows, and relu(0) = 0 keeps
+    the invariant inductive)."""
+    dims = [int(ws[0].shape[0])] + [int(w.shape[1]) for w in ws]
+    p = _lanes(max(dims), block_g)
+    wstack, wrstack = [], []
+    for w, wr in zip(ws, wrs):
+        f, g = w.shape
+        wr_col = (jnp.zeros((f, 1), jnp.float32) if wr is None
+                  else wr.astype(jnp.float32).reshape(f, 1))
+        wstack.append(jnp.pad(w.astype(jnp.float32),
+                              [(0, p - f), (0, p - g)]))
+        wrstack.append(jnp.pad(wr_col, [(0, p - f), (0, 0)]))
+    return jnp.stack(wstack), jnp.stack(wrstack), p, dims
+
+
+def _network_checks(tele_acts: Array, tele_preds: Array, granularity: str,
+                    segments: Optional[Array], num_segments: Optional[int]
+                    ) -> List[Check]:
+    """Per-layer Checks from the network kernel's telescoped running sums
+    [L, nbm, width].  The final telescope value of a stripe IS its stripe
+    corner (the same Σ acc / Σ ex the single-layer sweep emits), so every
+    granularity reduces from the telescopes exactly as it would from a
+    sequential per-layer run."""
+    checks: List[Check] = []
+    for ell in range(tele_acts.shape[0]):
+        ta, tp = tele_acts[ell], tele_preds[ell]
+        if granularity == "slot":
+            checks.append(slot_check_corners(ta, tp))
+        elif granularity == "stripe":
+            checks.append(Check(predicted=tp[:, -1], actual=ta[:, -1],
+                                granularity="stripe"))
+        elif granularity == "graph":
+            pred = jax.ops.segment_sum(tp[:, -1], segments,
+                                       num_segments=num_segments + 1,
+                                       indices_are_sorted=True
+                                       )[:num_segments]
+            actual = jax.ops.segment_sum(ta[:, -1], segments,
+                                         num_segments=num_segments + 1,
+                                         indices_are_sorted=True
+                                         )[:num_segments]
+            checks.append(Check(predicted=pred, actual=actual,
+                                granularity="graph"))
+        else:
+            checks.append(Check(predicted=tp[:, -1].sum(),
+                                actual=ta[:, -1].sum()))
+    return checks
+
+
+def gcn_network_packed(cols: Array, vals: Array, h0: Array,
+                       ws: Sequence[Array], wrs: Sequence[Optional[Array]],
+                       segments: Optional[Array], *,
+                       num_segments: Optional[int] = None,
+                       block_g: int = 128, interpret: bool = False,
+                       granularity: str = "graph",
+                       inject: Optional[Tuple[int, int, int, float]] = None,
+                       stash_acts: bool = False
+                       ) -> Tuple[Array, List[Optional[Check]],
+                                  Optional[Tuple[Array, ...]]]:
+    """An L-layer GCN over a block-diagonal packed batch in ONE kernel
+    sweep: relu + the next layer's combination fold into the aggregation
+    epilogue, the activation matrix ping-pongs between two VMEM buffers,
+    and the eq.-5 column is carried across every layer boundary — one check
+    per layer, taken pre-activation, exactly as the sequential path.
+
+    ``wrs`` entries are the folded per-layer W·e (all present, or all
+    ``None`` to disable checking).  ``inject=(layer, stripe, slot, delta)``
+    is the accumulator fault hook.  ``stash_acts=True`` additionally writes
+    each layer's post-ReLU slab to HBM and returns the per-layer inputs
+    ``h_layers`` (h0, relu(out_0), …) for the surgical-repair tiers.
+    Returns (out [rows, g_last], [Check | None] per layer,
+    h_layers | None).
+    """
+    validate_packed_operands(vals, h0.shape[0], "h0")
+    n_layers = len(ws)
+    want_check = wrs[0] is not None
+    wstack, wrstack, p, dims = _network_weight_stacks(ws, wrs, block_g)
+    hp = _pad_axis(h0.astype(jnp.float32), 1, p)
+    res = gcn_network_kernel(cols, vals, hp, wstack, wrstack,
+                             interpret=interpret, inject=inject,
+                             with_check=want_check, stash_acts=stash_acts)
+    out, tele_acts, tele_preds, acts = res
+    out = out[:, :dims[-1]]
+    if want_check:
+        checks = _network_checks(tele_acts, tele_preds, granularity,
+                                 segments, num_segments)
+    else:
+        checks = [None] * n_layers
+    h_layers = None
+    if stash_acts:
+        h_layers = (h0,) + tuple(acts[ell][:, :dims[ell + 1]]
+                                 for ell in range(n_layers - 1))
+    return out, checks, h_layers
+
+
+def gcn_network_layer(bell: BlockEll, h: Array, ws: Sequence[Array],
+                      wrs: Sequence[Optional[Array]], *, block_g: int = 128,
+                      interpret: bool = False, granularity: str = "layer",
+                      inject: Optional[Tuple[int, int, int, float]] = None,
+                      stash_acts: bool = False
+                      ) -> Tuple[Array, List[Optional[Check]],
+                                 Optional[Tuple[Array, ...]]]:
+    """Single-graph whole-network fusion (see :func:`gcn_network_packed`).
+
+    Requires square blocks; H is padded to the full nbm*block_m stripe rows
+    (the activation buffer must cover every output stripe AND every
+    referenced column block — a square adjacency always satisfies this).
+    Returns (out [n, g_last], [Check | None] per layer, h_layers | None);
+    stashed h_layers keep the padded stripe rows (the repair path indexes
+    them by stripe)."""
+    if bell.block_m != bell.block_k:
+        raise ValueError("whole-network fusion needs square blocks; got "
+                         f"block_m={bell.block_m}, block_k={bell.block_k}")
+    if granularity == "graph":
+        raise ValueError("granularity='graph' needs a packed batch "
+                         "(gcn_network_packed with segments)")
+    n, _ = bell.shape
+    rows = bell.n_block_rows * bell.block_m
+    assert bell.padded_cols <= rows
+    cols, vals = device_block_ell(bell)
+    n_layers = len(ws)
+    want_check = wrs[0] is not None
+    wstack, wrstack, p, dims = _network_weight_stacks(ws, wrs, block_g)
+    hp = _pad_axis(fit_rows(h.astype(jnp.float32), rows), 1, p)
+    res = gcn_network_kernel(cols, vals, hp, wstack, wrstack,
+                             interpret=interpret, inject=inject,
+                             with_check=want_check, stash_acts=stash_acts)
+    out, tele_acts, tele_preds, acts = res
+    out = out[:n, :dims[-1]]
+    if want_check:
+        checks = _network_checks(tele_acts, tele_preds, granularity,
+                                 None, None)
+    else:
+        checks = [None] * n_layers
+    h_layers = None
+    if stash_acts:
+        h_layers = (fit_rows(h, rows),) + \
+            tuple(acts[ell][:, :dims[ell + 1]] for ell in range(n_layers - 1))
+    return out, checks, h_layers
 
 
 # ---------------------------------------------------------------------------
@@ -221,6 +396,68 @@ def hbm_bytes_fused(bell: BlockEll, f: int, g: int, *,
                        + nbm * width                # index table
                        + fp * gp + fp               # W, w_r (once)
                        + nbm * bm * gp + nbm + nbm * bm)
+
+
+def network_vmem_bytes(dims: Sequence[int], bm: int, rows: int, *,
+                       block_g: int = 128, itemsize: int = 4) -> int:
+    """Model of the whole-network kernel's peak VMEM working set.
+
+    Dominant term: the two ping-pong activation buffers [rows, P] that keep
+    the whole activation matrix resident across layer boundaries (absent
+    for a single layer).  Resident per layer: one W slab [P, P] + w_r [P].
+    Per step, double-buffered: the S tile and (layer 0 only, but the
+    pipeline allocates it throughout) the H0 tile.  Plus the output block,
+    the f32 accumulator, the recomputed x tile, and the extra column.
+    """
+    p = _lanes(max(dims), block_g)
+    n_layers = len(dims) - 1
+    act = 2 * rows * p if n_layers > 1 else 0
+    resident = p * p + p
+    streamed = 2 * (bm * bm + bm * p)
+    working = 2 * bm * p + bm * p + bm * p + 2 * bm
+    return itemsize * (act + resident + streamed + working)
+
+
+def fused_network_fits(dims: Sequence[int], bm: int, rows: int, *,
+                       block_g: int = 128,
+                       budget: int = FUSED_VMEM_BUDGET) -> bool:
+    """True when the whole-network working set — activation ping-pong
+    buffers included — fits the VMEM budget; the engine falls back to
+    per-layer fused (then two-pass) otherwise."""
+    return network_vmem_bytes(dims, bm, rows, block_g=block_g) <= budget
+
+
+def hbm_bytes_network(bell: BlockEll, dims: Sequence[int], *,
+                      block_g: int = 128, stash_acts: bool = False,
+                      itemsize: int = 4) -> int:
+    """Modeled HBM bytes of the whole-network kernel: S tiles + the index
+    table are re-read once per layer (same as running the per-layer fused
+    kernel L times), but the H tiles stream from HBM only at layer 0, each
+    W/w_r slab is read once, and only the final logits are written —
+    every intermediate activation stays in VMEM.  ``stash_acts`` adds one
+    [rows, P] slab write per layer (repairability export, never re-read),
+    which still strictly undercuts per-layer fusion's write-then-re-read
+    of the same activations through the tile schedule.
+
+    All widths pay the shared lane-padded P = max over layer dims — the
+    price of fixed activation buffers; compare against
+    ``sum(hbm_bytes_fused(bell, f_l, g_l))`` which pads per layer.
+    """
+    p = _lanes(max(dims), block_g)
+    nbm, width = bell.n_block_rows, bell.width
+    bm = bell.block_m
+    n_layers = len(dims) - 1
+    tiles = nbm * width
+    rows = nbm * bm
+    traffic = (n_layers * tiles * bm * bell.block_k  # S tiles, per layer
+               + nbm * width                         # index table (once)
+               + tiles * bell.block_k * p            # H0 tiles (layer 0)
+               + n_layers * (p * p + p)              # W / w_r stack
+               + rows * p                            # final logits, once
+               + 2 * n_layers * nbm * width)         # slot telescopes
+    if stash_acts:
+        traffic += n_layers * rows * p
+    return itemsize * traffic
 
 
 def gcn_fused_auto(bell: BlockEll, h: Array, w: Array,

@@ -26,6 +26,7 @@ get wrong.
 from __future__ import annotations
 
 import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,34 +34,52 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(cols_ref, s_ref, x_ref, xr_ref, out_ref, sums_ref, extra_ref,
-            acc_ref, ex_ref):
-    j = pl.program_id(1)
-    nj = pl.num_programs(1)
+def _make_kernel(inject: Optional[Tuple[int, int, float]]):
+    def _kernel(cols_ref, s_ref, x_ref, xr_ref, out_ref, sums_ref, extra_ref,
+                acc_ref, ex_ref):
+        j = pl.program_id(1)
+        nj = pl.num_programs(1)
 
-    @pl.when(j == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-        ex_ref[...] = jnp.zeros_like(ex_ref)
+        @pl.when(j == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            ex_ref[...] = jnp.zeros_like(ex_ref)
 
-    s = s_ref[0, 0]
-    acc_ref[...] += jnp.dot(s, x_ref[...], preferred_element_type=jnp.float32)
-    ex_ref[...] += jnp.dot(s, xr_ref[...], preferred_element_type=jnp.float32)
+        s = s_ref[0, 0]
+        acc_ref[...] += jnp.dot(s, x_ref[...],
+                                preferred_element_type=jnp.float32)
+        ex_ref[...] += jnp.dot(s, xr_ref[...],
+                               preferred_element_type=jnp.float32)
 
-    @pl.when(j == nj - 1)
-    def _epilogue():
-        acc = acc_ref[...]
-        out_ref[...] = acc.astype(out_ref.dtype)
-        sums_ref[0, 0] = jnp.sum(acc)
-        extra_ref[...] = ex_ref[...]
+        if inject is not None:
+            # same accumulator-upset hook as the fused kernel: perturbs one
+            # element mid-sweep so the two-pass path's detection + surgical
+            # repair can be exercised end to end
+            ii, jj, delta = inject
+
+            @pl.when((pl.program_id(0) == ii) & (j == jj))
+            def _inject():
+                acc_ref[0, 0] += jnp.float32(delta)
+
+        @pl.when(j == nj - 1)
+        def _epilogue():
+            acc = acc_ref[...]
+            out_ref[...] = acc.astype(out_ref.dtype)
+            sums_ref[0, 0] = jnp.sum(acc)
+            extra_ref[...] = ex_ref[...]
+
+    return _kernel
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "inject"))
 def spmm_abft_kernel(block_cols: jax.Array, values: jax.Array, x: jax.Array,
-                     xr: jax.Array, *, interpret: bool = False):
+                     xr: jax.Array, *, interpret: bool = False,
+                     inject: Optional[Tuple[int, int, float]] = None):
     """block_cols: [nbm, width] i32; values: [nbm, width, bm, bk];
     x: [K, G]; xr: [K, 1].  K and G must be padded by the caller (ops.py)
     to bk / lane multiples and to cover max(block_cols)+1 stripes.
+    ``inject=(stripe, slot, delta)`` perturbs one accumulator element
+    mid-sweep (CI fault hook).
     Returns (out [nbm*bm, G], stripe_sums [nbm, 1], extra [nbm*bm, 1])."""
     nbm, width, bm, bk = values.shape
     k, g = x.shape
@@ -85,7 +104,7 @@ def spmm_abft_kernel(block_cols: jax.Array, values: jax.Array, x: jax.Array,
         ],
     )
     return pl.pallas_call(
-        _kernel,
+        _make_kernel(inject),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((nbm * bm, g), x.dtype),

@@ -79,6 +79,7 @@ def stripe_check_corners(stripe_sums: jax.Array, extra: jax.Array) -> Check:
 def spmm_abft(bell: BlockEll, x: jax.Array, xr: Optional[jax.Array] = None,
               *, block_g: int = 128, interpret: bool = False,
               granularity: str = "layer",
+              inject: Optional[Tuple[int, int, float]] = None,
               _staged: Optional[Tuple[jax.Array, jax.Array]] = None
               ) -> Tuple[jax.Array, Check]:
     """out = S @ X with the fused ABFT check computed in the same pass.
@@ -99,7 +100,8 @@ def spmm_abft(bell: BlockEll, x: jax.Array, xr: Optional[jax.Array] = None,
     cols, vals = _staged if _staged is not None else device_block_ell(bell)
     xp, xrp = prepare_operands(bell, x, xr, block_g)
     out, stripe_sums, extra = spmm_abft_kernel(cols, vals, xp, xrp,
-                                               interpret=interpret)
+                                               interpret=interpret,
+                                               inject=inject)
     if granularity == "stripe":
         return trim_output(bell, out, g), stripe_check_corners(stripe_sums,
                                                                extra)
@@ -143,7 +145,8 @@ def packed_check_corners(stripe_sums: jax.Array, extra: jax.Array,
 def spmm_abft_packed(cols: jax.Array, vals: jax.Array, x: jax.Array,
                      xr: Optional[jax.Array], segments: jax.Array,
                      *, num_segments: int, block_g: int = 128,
-                     interpret: bool = False, granularity: str = "graph"
+                     interpret: bool = False, granularity: str = "graph",
+                     inject: Optional[Tuple[int, int, float]] = None
                      ) -> Tuple[jax.Array, Optional[Check]]:
     """Block-diagonal packed SpMM with *per-graph* fused check corners.
 
@@ -179,7 +182,8 @@ def spmm_abft_packed(cols: jax.Array, vals: jax.Array, x: jax.Array,
     xrp = (jnp.zeros((rows, 1), jnp.float32) if xr is None
            else xr.astype(jnp.float32))
     out, stripe_sums, extra = spmm_abft_kernel(cols, vals, xp, xrp,
-                                               interpret=interpret)
+                                               interpret=interpret,
+                                               inject=inject)
     out = out[:, :g]
     if not want_check:
         return out, None

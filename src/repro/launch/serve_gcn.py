@@ -73,6 +73,7 @@ _dense_retry_fn = dense_retry_fn
 def serve(batches: Sequence[Batch], params, cfg: ABFTConfig,
           guard: Optional[ABFTGuard] = None, verbose: bool = True, *,
           block_g: int = 128, fused_layer: bool = False,
+          fused_network: bool = False, vmem_budget: Optional[int] = None,
           granularity: str = "graph"):
     """Run every batch through the guarded jitted step; returns stats.
 
@@ -80,31 +81,45 @@ def serve(batches: Sequence[Batch], params, cfg: ABFTConfig,
     block-ELL); both report per-graph verdicts, assembled into stream order
     via each batch's ``indices``.  Retries re-pack at each batch's own
     block size (``PackedGraphs.block``).  ``fused_layer=True`` selects the
-    single-pass gcn_fused kernel on the packed path (dense path unaffected).
-    ``granularity="stripe"`` (packed batches only) keeps per-stripe check
-    corners and arms the guard's surgical retry tier — the escalation
-    ladder becomes stripe -> graph -> whole-step restore.
+    single-pass gcn_fused kernel on the packed path (dense path unaffected);
+    ``fused_network=True`` tries the whole-network kernel first — every
+    layer in ONE HBM traversal with activations resident in VMEM, falling
+    back to the per-layer ladder when the depth-wide working set exceeds
+    ``vmem_budget``.  ``granularity="stripe"`` (packed batches only) keeps
+    per-stripe check corners and arms the guard's surgical retry tier;
+    ``"slot"`` keeps per-(stripe, slot) telescoped corners and adds the
+    slot-surgical rung below it — the escalation ladder becomes
+    slot -> stripe -> graph -> whole-step restore.
     """
-    if granularity not in ("graph", "stripe"):
+    if granularity not in ("graph", "stripe", "slot"):
         raise ValueError(f"serve granularity {granularity!r} not in "
-                         f"('graph', 'stripe')")
+                         f"('graph', 'stripe', 'slot')")
     guard = guard if guard is not None else ABFTGuard()
     params = fold_w_r(params, cfg)
     dense_step = None
-    packed = PackedRunner(params, cfg, block_g, fused_layer, granularity)
+    packed = PackedRunner(params, cfg, block_g, fused_layer, granularity,
+                          fused_network=fused_network,
+                          vmem_budget=vmem_budget)
+    fusion = {"fused_hits": 0, "fused_fallbacks": 0,
+              "network_hits": 0, "network_fallbacks": 0}
 
     def run_one(b: Batch, warm: bool):
         nonlocal dense_step
-        stripe_retry = None
+        stripe_retry = slot_retry = None
         if isinstance(b, PackedGraphs):
             step, args = packed.step_for(b), packed_step_args(b)
             retry = packed.retry_fn(b)
-            if granularity == "stripe":
+            if granularity in ("stripe", "slot"):
                 stripe_retry = packed.stripe_retry_fn(b)
+            if granularity == "slot":
+                slot_retry = packed.slot_retry_fn(b)
+            if not warm:
+                for key, n in packed.fusion_counts(b).items():
+                    fusion[key] += n
         else:
             if granularity != "graph":
                 raise ValueError("dense batches have no row-stripes; "
-                                 "--check-granularity stripe needs "
+                                 "--check-granularity stripe/slot needs "
                                  "--backend block_ell")
             if dense_step is None:
                 dense_step = make_serve_step(params, cfg)
@@ -115,7 +130,8 @@ def serve(batches: Sequence[Batch], params, cfg: ABFTConfig,
             out, metrics = step(*args)
         else:
             out, metrics = guard.run_step_graphs(
-                step, retry, *args, stripe_retry_fn=stripe_retry)
+                step, retry, *args, stripe_retry_fn=stripe_retry,
+                slot_retry_fn=slot_retry)
         jax.block_until_ready(metrics["abft_graph_flags"])
         return out, metrics
 
@@ -147,10 +163,14 @@ def serve(batches: Sequence[Batch], params, cfg: ABFTConfig,
     gps = n_graphs / max(dt, 1e-9)
     kind = "packed block_ell" if any(isinstance(b, PackedGraphs)
                                      for b in batches) else "dense"
-    if fused_layer and kind != "dense":
+    if fused_network and kind != "dense":
+        kind += " (fused-network)"
+    elif fused_layer and kind != "dense":
         kind += " (fused-layer)"
     if granularity == "stripe":
         kind += " [stripe corners]"
+    elif granularity == "slot":
+        kind += " [slot corners]"
     if verbose:
         print(f"served {n_graphs} graphs in {len(batches)} {kind} batches "
               f"({len(shapes)} shapes) in {dt*1e3:.1f} ms "
@@ -158,15 +178,24 @@ def serve(batches: Sequence[Batch], params, cfg: ABFTConfig,
         print(f"guard: steps={guard.steps} flags={guard.flags} "
               f"retries={guard.retries} graph_retries={guard.graph_retries} "
               f"stripe_retries={guard.stripe_retries} "
+              f"slot_retries={guard.slot_retries} "
               f"recomputed_rows={guard.recomputed_rows} "
               f"flag_rate={guard.flag_rate:.4f} "
               f"evict={guard.should_evict()}")
+        if fusion["network_hits"] or fusion["network_fallbacks"] \
+                or fusion["fused_hits"] or fusion["fused_fallbacks"]:
+            print(f"fusion: network_hits={fusion['network_hits']} "
+                  f"network_fallbacks={fusion['network_fallbacks']} "
+                  f"fused_hits={fusion['fused_hits']} "
+                  f"fused_fallbacks={fusion['fused_fallbacks']}")
     return {"graphs": n_graphs, "batches": len(batches), "seconds": dt,
             "graphs_per_sec": gps, "flags": guard.flags,
             "graph_retries": guard.graph_retries,
             "stripe_retries": guard.stripe_retries,
+            "slot_retries": guard.slot_retries,
             "recomputed_rows": guard.recomputed_rows,
-            "graph_flags": graph_flags, "graph_max_rel": graph_max_rel}
+            "graph_flags": graph_flags, "graph_max_rel": graph_max_rel,
+            **fusion}
 
 
 def main(argv: Optional[Sequence[str]] = None) -> dict:
@@ -193,16 +222,28 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
                     help="run each packed layer through the single-pass "
                          "gcn_fused kernel (combination + aggregation + "
                          "check in one HBM traversal; block_ell backend)")
+    ap.add_argument("--fused-network", action="store_true",
+                    help="run the WHOLE network through one kernel sweep "
+                         "(activations ping-pong in VMEM, one HBM "
+                         "traversal end-to-end; falls back to the "
+                         "per-layer ladder when the depth-wide working "
+                         "set exceeds the VMEM budget; block_ell backend)")
+    ap.add_argument("--vmem-budget", type=int, default=None,
+                    help="override the fused-kernel VMEM budget in bytes "
+                         "(default: kernels.gcn_fused FUSED_VMEM_BUDGET)")
     ap.add_argument("--check-granularity", default="graph",
-                    choices=["graph", "stripe"],
-                    help="fault attribution: per packed graph (default) or "
-                         "per row-stripe — stripe arms the guard's "
-                         "surgical retry tier (block_ell backend)")
+                    choices=["graph", "stripe", "slot"],
+                    help="fault attribution: per packed graph (default), "
+                         "per row-stripe, or per (stripe, slot) tile "
+                         "column — stripe/slot arm the guard's surgical "
+                         "retry tiers (block_ell backend)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
-    if args.check_granularity == "stripe" and args.backend != "block_ell":
-        ap.error("--check-granularity stripe needs --backend block_ell "
-                 "(dense batches have no row-stripes)")
+    if args.check_granularity != "graph" and args.backend != "block_ell":
+        ap.error(f"--check-granularity {args.check_granularity} needs "
+                 f"--backend block_ell (dense batches have no row-stripes)")
+    if args.fused_network and args.backend != "block_ell":
+        ap.error("--fused-network needs --backend block_ell")
 
     buckets = [int(b) for b in args.buckets.split(",")]
     n_lo, n_hi = (int(v) for v in args.nodes.split(","))
@@ -222,6 +263,8 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
     params = init_gcn(jax.random.PRNGKey(args.seed),
                       (args.feat, args.hidden, args.classes))
     return serve(batches, params, cfg, fused_layer=args.fused_layer,
+                 fused_network=args.fused_network,
+                 vmem_budget=args.vmem_budget,
                  granularity=args.check_granularity)
 
 

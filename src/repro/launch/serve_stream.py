@@ -48,8 +48,14 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
     ap.add_argument("--abft", default="fused",
                     choices=["none", "split", "fused"])
     ap.add_argument("--fused-layer", action="store_true")
+    ap.add_argument("--fused-network", action="store_true",
+                    help="whole-network kernel: every layer in one HBM "
+                         "traversal, activations resident in VMEM (falls "
+                         "back per batch when over the VMEM budget)")
+    ap.add_argument("--vmem-budget", type=int, default=None,
+                    help="override the fused-kernel VMEM budget in bytes")
     ap.add_argument("--check-granularity", default="graph",
-                    choices=["graph", "stripe"])
+                    choices=["graph", "stripe", "slot"])
     ap.add_argument("--profile", type=int, default=32,
                     help="leading requests used as the rung-planning "
                          "traffic profile")
@@ -96,6 +102,8 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
                         if args.deadline_ms > 0 else None),
         oversize_policy=args.oversize,
         fused_layer=args.fused_layer,
+        fused_network=args.fused_network,
+        vmem_budget=args.vmem_budget,
         granularity=args.check_granularity,
         keep_logits=False)
     engine.warmup()
@@ -130,6 +138,11 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
           f"(+{stats['singleton_dispatches']} singleton dispatches); "
           f"guard flags={stats['guard_flags']} "
           f"retries={stats['guard_retries']}")
+    if args.fused_layer or args.fused_network:
+        print(f"fusion: network_hits={stats['network_hits']} "
+              f"network_fallbacks={stats['network_fallbacks']} "
+              f"fused_hits={stats['fused_hits']} "
+              f"fused_fallbacks={stats['fused_fallbacks']}")
     if interpret:
         print("WARNING: interpret-mode kernels (no real accelerator) — "
               "latency/throughput numbers are NOT authoritative")
@@ -144,6 +157,8 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
                           "feat": args.feat, "hidden": args.hidden,
                           "classes": args.classes, "abft": args.abft,
                           "fused_layer": args.fused_layer,
+                          "fused_network": args.fused_network,
+                          "vmem_budget": args.vmem_budget,
                           "granularity": args.check_granularity,
                           "queue_capacity": args.queue_capacity,
                           "deadline_ms": args.deadline_ms,

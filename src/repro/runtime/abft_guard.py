@@ -28,9 +28,13 @@ also emits per-stripe verdicts (``abft_stripe_flags``) and a
 — re-execute only the flagged stripes' rows, splice, re-verify
 (``engine.localize.surgical_stripe_retry``) — and only escalates to the
 per-graph retry, and then to restore->replay, when the repair cannot be
-verified.  ``guard.retries`` counts re-executions *performed* on every
-tier (never mere intents); ``stripe_retries`` / ``recomputed_rows`` track
-the surgical tier's row economics.
+verified.  At slot granularity there is one rung below that: per-(stripe,
+ell-slot) verdicts (``abft_slot_flags``) plus a ``slot_retry_fn``
+(``engine.localize.surgical_slot_retry``) repair with row-level downstream
+propagation, escalating slot -> stripe -> graph -> restore.
+``guard.retries`` counts re-executions *performed* on every tier (never
+mere intents); ``slot_retries`` / ``stripe_retries`` /
+``recomputed_rows`` track the surgical tiers' row economics.
 
 Because the checked step is pure (params, batch) -> outputs, the retry is
 exact replay; no optimizer state was committed for a flagged step (the guard
@@ -73,6 +77,7 @@ class ABFTGuard:
         self.retries = 0         # re-executions PERFORMED (any tier)
         self.graph_retries = 0   # individual graphs re-run by partial retry
         self.stripe_retries = 0  # individual stripes re-run surgically
+        self.slot_retries = 0    # stripes re-run by the slot-surgical tier
         self.recomputed_rows = 0  # rows re-executed by partial retries
         self.restores = 0
         # per-step flagged? outcomes, newest last; drives the rolling rate —
@@ -115,6 +120,8 @@ class ABFTGuard:
                         retry_fn: Callable[[Any, np.ndarray],
                                            Tuple[Any, Any]], *args,
                         stripe_retry_fn: Optional[
+                            Callable[[Any, Any], Tuple[Any, Any]]] = None,
+                        slot_retry_fn: Optional[
                             Callable[[Any, Any], Tuple[Any, Any]]] = None):
         """Per-graph guarded batch step for multi-graph serving.
 
@@ -128,24 +135,59 @@ class ABFTGuard:
         out, metrics = step_fn(*args)
         return self.adjudicate(out, metrics, retry_fn,
                                stripe_retry_fn=stripe_retry_fn,
+                               slot_retry_fn=slot_retry_fn,
                                replay=(step_fn, args))
 
     @staticmethod
     def _adopt(metrics):
         """Adopted-metrics hygiene: the step's intermediate activations
-        (``abft_h_layers``, every layer's full input) exist ONLY so a
-        surgical stripe retry can re-execute flagged rows.  Once the ladder
-        has resolved they are dead weight — a serving loop that retains
-        per-batch metrics would pin every batch's activations for the whole
-        run — so they never leave the guard."""
-        if isinstance(metrics, dict) and "abft_h_layers" in metrics:
+        (``abft_h_layers``, every layer's full input; ``abft_x_layers``,
+        the stashed two-pass combination outputs) exist ONLY so a surgical
+        retry can re-execute flagged rows.  Once the ladder has resolved
+        they are dead weight — a serving loop that retains per-batch
+        metrics would pin every batch's activations for the whole run —
+        so they never leave the guard."""
+        if isinstance(metrics, dict) and (
+                "abft_h_layers" in metrics or "abft_x_layers" in metrics):
             metrics = {k: v for k, v in metrics.items()
-                       if k != "abft_h_layers"}
+                       if k not in ("abft_h_layers", "abft_x_layers")}
+        return metrics
+
+    def _surgical_adopt(self, metrics, sub, flags, grel, name: str):
+        """Adopted metrics of a verified surgical repair: every fault flag
+        cleared, the discarded execution's divergence magnitudes dropped
+        (the repair does not reconstruct them), the repaired graphs'
+        max_rel replaced from the sub-sweep's corners."""
+        metrics = {**metrics, "abft_flag": False,
+                   "abft_graph_flags": np.asarray(sub["abft_graph_flags"],
+                                                  dtype=bool)}
+        for key in ("abft_stripe_flags", "abft_slot_flags"):
+            if key in metrics:
+                metrics[key] = np.zeros_like(
+                    np.asarray(metrics[key], dtype=bool))
+        metrics.pop("abft_stripe_max_rel", None)
+        metrics.pop("abft_slot_max_rel", None)
+        if grel is not None and "abft_graph_max_rel" in sub:
+            sub_rel = np.asarray(sub["abft_graph_max_rel"], np.float32)
+            if sub_rel.shape != grel.shape:
+                raise ValueError(
+                    f"{name}_retry_fn returned abft_graph_max_rel "
+                    f"of shape {sub_rel.shape}; expected the full "
+                    f"batch vector {grel.shape}")
+            # replace only the repaired graphs' divergences; the
+            # untouched graphs' adopted values stand
+            grel = np.where(flags, sub_rel, grel)
+            metrics["abft_graph_max_rel"] = grel
+            metrics["abft_max_rel"] = grel.max(initial=0.0)
+        else:
+            metrics.pop("abft_max_rel", None)
         return metrics
 
     def adjudicate(self, out, metrics,
                    retry_fn: Callable[[Any, np.ndarray], Tuple[Any, Any]],
                    *, stripe_retry_fn: Optional[
+                       Callable[[Any, Any], Tuple[Any, Any]]] = None,
+                   slot_retry_fn: Optional[
                        Callable[[Any, Any], Tuple[Any, Any]]] = None,
                    replay: Optional[Tuple[Callable[..., Tuple[Any, Any]],
                                           tuple]] = None):
@@ -171,18 +213,25 @@ class ABFTGuard:
         ``replay`` -> the escalation raises instead of replaying).
 
         ``stripe_retry_fn(out, metrics)`` is the optional surgical tier,
-        tried FIRST when the step carries per-stripe verdicts
+        tried when the step carries per-stripe verdicts
         (``metrics['abft_stripe_flags']``, granularity="stripe"): it
         re-executes only the flagged stripes' rows and returns
         (patched_out, sub_metrics) with a FULL-batch
         ``sub_metrics['abft_graph_flags']`` vector (all-False on verified
         success) plus ``abft_rows_recomputed`` / ``abft_stripes_recomputed``
         accounting.  An unverified repair escalates to the per-graph tier.
+        ``slot_retry_fn(out, metrics)`` is one rung finer, tried FIRST
+        when the step carries per-(stripe, slot) verdicts
+        (``metrics['abft_slot_flags']``, granularity="slot"): same
+        contract, row-level downstream propagation; an unverified slot
+        repair escalates to the stripe tier, then per-graph, then
+        restore->replay.
 
-        Adopted metrics never carry ``abft_h_layers`` (the per-layer
-        activation stash exists for the surgical closure only — retaining
-        it per batch would leak every batch's activations over a sustained
-        stream); the closures see the full metrics.
+        Adopted metrics never carry ``abft_h_layers`` / ``abft_x_layers``
+        (the per-layer operand stashes exist for the surgical closures
+        only — retaining them per batch would leak every batch's
+        activations over a sustained stream); the closures see the full
+        metrics.
         """
         self.steps += 1
         flags = np.array(metrics["abft_graph_flags"], dtype=bool).copy()
@@ -194,6 +243,31 @@ class ABFTGuard:
         if "abft_graph_max_rel" in metrics:
             grel = np.array(metrics["abft_graph_max_rel"],
                             dtype=np.float32).copy()
+        # --- tier -1: slot-surgical repair -------------------------------
+        slflags = np.asarray(metrics.get("abft_slot_flags", False),
+                             dtype=bool)
+        if slot_retry_fn is not None and slflags.any():
+            log.error("ABFT: step %d: %d slot corner(s) flagged; "
+                      "attempting slot-surgical repair", self.steps,
+                      int(slflags.sum()))
+            out2, sub = slot_retry_fn(out, metrics)
+            performed = int(sub.get("abft_stripes_recomputed", 0))
+            self.retries += int(performed > 0)
+            self.slot_retries += performed
+            self.recomputed_rows += int(sub.get("abft_rows_recomputed", 0))
+            new_flags = np.asarray(sub["abft_graph_flags"], dtype=bool)
+            if new_flags.shape != flags.shape:
+                raise ValueError(
+                    f"slot_retry_fn returned abft_graph_flags of shape "
+                    f"{new_flags.shape}; the surgical tier's contract is "
+                    f"the FULL batch vector {flags.shape}")
+            if not new_flags.any():
+                log.warning("ABFT: slot-surgical repair adopted")
+                self._recent.append(True)
+                metrics = self._surgical_adopt(metrics, sub, flags, grel,
+                                               "slot")
+                return out2, self._adopt(metrics)
+            out, flags = out2, new_flags.copy()
         # --- tier 0: stripe-surgical repair ------------------------------
         sflags = np.asarray(metrics.get("abft_stripe_flags", False),
                             dtype=bool)
@@ -217,29 +291,12 @@ class ABFTGuard:
             if not new_flags.any():
                 log.warning("ABFT: surgical stripe repair adopted")
                 self._recent.append(True)
-                metrics = {**metrics, "abft_flag": False,
-                           "abft_graph_flags": new_flags,
-                           "abft_stripe_flags": np.zeros_like(sflags)}
                 # adopted metrics only: the per-stripe divergences belong
                 # to the discarded execution and are not reconstructed by
                 # the repair — drop them rather than report fault-magnitude
                 # values under a clean flag
-                metrics.pop("abft_stripe_max_rel", None)
-                if grel is not None and "abft_graph_max_rel" in sub:
-                    sub_rel = np.asarray(sub["abft_graph_max_rel"],
-                                         np.float32)
-                    if sub_rel.shape != grel.shape:
-                        raise ValueError(
-                            f"stripe_retry_fn returned abft_graph_max_rel "
-                            f"of shape {sub_rel.shape}; expected the full "
-                            f"batch vector {grel.shape}")
-                    # replace only the repaired graphs' divergences; the
-                    # untouched graphs' adopted values stand
-                    grel = np.where(flags, sub_rel, grel)
-                    metrics["abft_graph_max_rel"] = grel
-                    metrics["abft_max_rel"] = grel.max(initial=0.0)
-                else:
-                    metrics.pop("abft_max_rel", None)
+                metrics = self._surgical_adopt(metrics, sub, flags, grel,
+                                               "stripe")
                 return out2, self._adopt(metrics)
             out, flags = out2, new_flags.copy()
         # --- tier 1: per-graph retry -------------------------------------
@@ -278,6 +335,9 @@ class ABFTGuard:
                 if sflags.any():
                     metrics["abft_stripe_flags"] = np.zeros_like(sflags)
                     metrics.pop("abft_stripe_max_rel", None)
+                if slflags.any():
+                    metrics["abft_slot_flags"] = np.zeros_like(slflags)
+                    metrics.pop("abft_slot_max_rel", None)
                 # adopted metrics only: the failed attempts' divergences
                 # were replaced along with their outputs — when we cannot
                 # reconstruct max_rel per graph, drop it rather than return

@@ -1,0 +1,361 @@
+"""Whole-network fusion + slot-granular localization (ISSUE 7 tentpole).
+
+Acceptance properties:
+  (a) parity: the whole-network kernel (one HBM traversal, activations
+      ping-ponging in VMEM) matches the sequential per-layer fused chain
+      BIT-FOR-BIT at every depth, and emits one pre-activation check per
+      layer (ReLU still breaks the chain — fusing it into the epilogue
+      must not coarsen the check granularity);
+  (b) VMEM fallback: a network whose depth-wide working set exceeds the
+      budget falls back to the per-layer ladder mid-serve — same logits,
+      counters tell the operator which path ran;
+  (c) slot corners: a fault injected at every (layer, stripe, slot) flags
+      exactly ONE telescoped slot corner at the injected coordinates, and
+      the slot-surgical repair splices bit-for-bit while re-executing no
+      more rows than the stripe tier;
+  (d) X-stash two-pass repair: with fused_layer=False the serve step
+      stashes each layer's combination output X, so the stripe-surgical
+      tier replays the faulted aggregation bitwise instead of escalating;
+  (e) guard ladder: slot tier runs before stripe; its accounting
+      (slot_retries, recomputed_rows) is exact; a clean adoption strips
+      the stash keys; serve/stream stats surface the fusion counters.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.abft import ABFTConfig
+from repro.core.gcn import init_gcn
+from repro.engine import (
+    Graph,
+    fold_w_r,
+    gcn_forward,
+    make_backend,
+    pack_graphs,
+    synth_graph_stream,
+)
+from repro.engine.localize import surgical_slot_retry
+from repro.engine.streaming import (
+    PackedRunner,
+    make_packed_serve_step,
+    packed_step_args,
+)
+from repro.runtime import ABFTGuard
+
+
+def _stream(n_graphs=3, seed=1, feat=8, n_lo=20, n_hi=44):
+    return synth_graph_stream(n_graphs, n_lo=n_lo, n_hi=n_hi, feat=feat,
+                              seed=seed)
+
+
+def _cfg(**kw):
+    return ABFTConfig(mode="fused", threshold=1e-3, relative=True, **kw)
+
+
+def _setup(dims=(8, 8, 3), seed=1, n_graphs=3, block=16):
+    stream = _stream(n_graphs, seed=seed, feat=dims[0])
+    pb = pack_graphs(stream, block=block)
+    cfg = _cfg()
+    params = fold_w_r(init_gcn(jax.random.PRNGKey(seed), dims), cfg)
+    return pb, cfg, params
+
+
+# ---------------------------------------------------------------------------
+# (a) whole-network parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dims", [(8, 8, 3), (8, 16, 8, 3)])
+def test_network_matches_per_layer_fused_bitwise(dims):
+    pb, cfg, params = _setup(dims=dims)
+    args = packed_step_args(pb)
+    ref = make_packed_serve_step(params, cfg, pb.n_slots, block_g=16,
+                                 fused_layer=True)
+    net = make_packed_serve_step(params, cfg, pb.n_slots, block_g=16,
+                                 fused_network=True)
+    out_ref, m_ref = ref(*args)
+    out_net, m_net = net(*args)
+    assert not bool(m_net["abft_flag"])
+    assert np.array_equal(np.asarray(out_net), np.asarray(out_ref))
+
+
+def test_network_emits_one_pre_activation_check_per_layer():
+    pb, cfg, params = _setup(dims=(8, 16, 8, 3))
+    bk = make_backend(pb, cfg, fused_network=True)
+    _, checks = gcn_forward(params, Graph(s=pb, h0=jnp.asarray(pb.h0)),
+                            cfg, backend=bk)
+    assert bk.network_hits == 1 and bk.network_fallbacks == 0
+    assert len(checks) == len(params["layers"])
+    # per-graph corners at the default packed granularity, one per layer
+    assert all(c.granularity == "graph" for c in checks)
+    assert all(c.actual.shape == (pb.n_slots,) for c in checks)
+
+
+def test_network_matches_two_pass_numerically():
+    pb, cfg, params = _setup(dims=(8, 16, 8, 3), seed=3)
+    args = packed_step_args(pb)
+    two = make_packed_serve_step(params, cfg, pb.n_slots, block_g=16)
+    net = make_packed_serve_step(params, cfg, pb.n_slots, block_g=16,
+                                 fused_network=True)
+    out_two, _ = two(*args)
+    out_net, _ = net(*args)
+    np.testing.assert_allclose(np.asarray(out_net), np.asarray(out_two),
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# (b) VMEM fallback
+# ---------------------------------------------------------------------------
+
+def test_network_vmem_fallback_preserves_logits_and_counts():
+    pb, cfg, params = _setup()
+    args = packed_step_args(pb)
+    ref = make_packed_serve_step(params, cfg, pb.n_slots, block_g=16,
+                                 fused_layer=True)
+    out_ref, _ = ref(*args)
+    # a budget far below the ping-pong activation buffers: the network hook
+    # must decline and the per-layer ladder run instead — same logits
+    fb = make_packed_serve_step(params, cfg, pb.n_slots, block_g=16,
+                                fused_network=True, fused_layer=True,
+                                vmem_budget=1)
+    out_fb, m_fb = fb(*args)
+    assert not bool(m_fb["abft_flag"])
+    # budget=1 also evicts the per-layer fused kernel -> two-pass numerics
+    np.testing.assert_allclose(np.asarray(out_fb), np.asarray(out_ref),
+                               atol=1e-4)
+    runner = PackedRunner(params, cfg, 16, fused_layer=True,
+                          fused_network=True, vmem_budget=1)
+    counts = runner.fusion_counts(pb)
+    assert counts["network_hits"] == 0 and counts["network_fallbacks"] == 1
+    assert counts["fused_hits"] == 0
+    assert counts["fused_fallbacks"] == len(params["layers"])
+
+
+def test_network_hit_subsumes_layer_decisions():
+    pb, cfg, params = _setup()
+    runner = PackedRunner(params, cfg, 16, fused_layer=True,
+                          fused_network=True)
+    counts = runner.fusion_counts(pb)
+    assert counts == {"fused_hits": 0, "fused_fallbacks": 0,
+                      "network_hits": 1, "network_fallbacks": 0}
+
+
+# ---------------------------------------------------------------------------
+# (c) slot corners: exact detection + sub-stripe surgical repair
+# ---------------------------------------------------------------------------
+
+def test_slot_fault_sweep_exact_detection_and_repair():
+    """Inject at every (layer, stripe, slot): exactly ONE slot corner — at
+    the injected coordinates — flags, and the slot-surgical splice is
+    bit-for-bit while reaching no more rows than the stripe tier."""
+    pb, cfg, params = _setup(seed=5, n_graphs=2)
+    args = packed_step_args(pb)
+    clean = make_packed_serve_step(params, cfg, pb.n_slots, block_g=16,
+                                   fused_network=True, granularity="slot")
+    logits_clean, m_clean = clean(*args)
+    assert not bool(np.asarray(m_clean["abft_graph_flags"]).any())
+    logits_clean = np.asarray(logits_clean)
+
+    nbm, width = pb.bell.n_block_rows, pb.bell.width
+    stripe_graph = np.asarray(pb.stripe_graph)
+    n_layers = len(params["layers"])
+    real = [s for s in range(nbm) if stripe_graph[s] < pb.n_slots]
+    for layer in range(n_layers):
+        for stripe in real[::2]:
+            for slot in range(width):
+                step = make_packed_serve_step(
+                    params, cfg, pb.n_slots, block_g=16,
+                    fused_network=True, granularity="slot",
+                    inject=(layer, stripe, slot, 64.0))
+                out_bad, m_bad = step(*args)
+                slf = np.asarray(m_bad["abft_slot_flags"])
+                assert slf.shape == (n_layers, nbm, width)
+                hits = np.argwhere(slf)
+                assert hits.shape == (1, 3) and \
+                    tuple(hits[0]) == (layer, stripe, slot), \
+                    (layer, stripe, slot, hits.tolist())
+                repaired, sub = surgical_slot_retry(
+                    pb, params, cfg, out_bad, m_bad, block_g=16)
+                assert not sub["abft_graph_flags"].any()
+                assert np.array_equal(repaired, logits_clean), \
+                    (layer, stripe, slot)
+                assert sub["abft_rows_recomputed"] >= pb.block
+
+
+def test_slot_tier_reaches_fewer_rows_than_stripe_tier():
+    """Summed over a fault sweep the slot tier must re-execute strictly
+    fewer rows: its downstream reach only follows rows the splice actually
+    CHANGED, while the stripe tier follows every repaired row.  Negative
+    deltas on already-negative pre-activations are ReLU-masked — the check
+    still flags (it reads the pre-activation corner) but the splice changes
+    no post-ReLU row, so the slot tier stops at the flagged stripe."""
+    from repro.engine.localize import surgical_stripe_retry
+    stream = _stream(3, seed=7, n_lo=36, n_hi=72)
+    pb = pack_graphs(stream, block=16)
+    cfg = _cfg()
+    params = fold_w_r(init_gcn(jax.random.PRNGKey(7), (8, 8, 3)), cfg)
+    args = packed_step_args(pb)
+    stripe_graph = np.asarray(pb.stripe_graph)
+    real = [s for s in range(pb.bell.n_block_rows)
+            if stripe_graph[s] < pb.n_slots]
+    slot_rows = stripe_rows = 0
+    for stripe in real:
+        for delta in (64.0, -64.0):
+            step = make_packed_serve_step(
+                params, cfg, pb.n_slots, block_g=16, fused_network=True,
+                granularity="slot", inject=(0, stripe, 0, delta))
+            out_bad, m_bad = step(*args)
+            assert bool(m_bad["abft_flag"]), (stripe, delta)
+            _, sub_sl = surgical_slot_retry(pb, params, cfg, out_bad,
+                                            m_bad, block_g=16)
+            _, sub_st = surgical_stripe_retry(pb, params, cfg, out_bad,
+                                              m_bad, block_g=16)
+            assert sub_sl["abft_rows_recomputed"] <= \
+                sub_st["abft_rows_recomputed"]
+            slot_rows += int(sub_sl["abft_rows_recomputed"])
+            stripe_rows += int(sub_st["abft_rows_recomputed"])
+    assert slot_rows < stripe_rows, (slot_rows, stripe_rows)
+
+
+def test_mixed_granularity_two_pass_degrades_slot_to_stripe():
+    """granularity='slot' on the two-pass path (no per-slot telescopes)
+    must degrade to stripe corners, not fabricate slot flags: the slot
+    report emits all-False slabs for stripe-granular checks."""
+    pb, cfg, params = _setup(seed=9)
+    step = make_packed_serve_step(params, cfg, pb.n_slots, block_g=16,
+                                  granularity="slot",
+                                  inject=(0, 0, 0, 64.0))
+    _, m = step(*packed_step_args(pb))
+    slf = np.asarray(m["abft_slot_flags"])
+    sf = np.asarray(m["abft_stripe_flags"])
+    assert not slf.any()                       # no slot telescopes exist
+    assert sf.sum() == 1 and sf[0, 0]          # stripe corner still exact
+
+
+# ---------------------------------------------------------------------------
+# (d) X-stash: surgical repair on the two-pass path
+# ---------------------------------------------------------------------------
+
+def test_two_pass_stash_enables_bitwise_stripe_repair():
+    from repro.engine.localize import surgical_stripe_retry
+    pb, cfg, params = _setup(seed=13, n_graphs=2)
+    args = packed_step_args(pb)
+    clean = make_packed_serve_step(params, cfg, pb.n_slots, block_g=16,
+                                   granularity="stripe")
+    logits_clean, m_clean = clean(*args)
+    assert all(x is not None for x in m_clean["abft_x_layers"])
+    logits_clean = np.asarray(logits_clean)
+    n_layers = len(params["layers"])
+    # a last-layer fault replays from the exact stashed X -> bitwise splice
+    step = make_packed_serve_step(params, cfg, pb.n_slots, block_g=16,
+                                  granularity="stripe",
+                                  inject=(n_layers - 1, 0, 0, 64.0))
+    out_bad, m_bad = step(*args)
+    from repro.engine.localize import surgical_stripe_retry as retry
+    repaired, sub = retry(pb, params, cfg, out_bad, m_bad, block_g=16)
+    assert not sub["abft_graph_flags"].any()
+    assert np.array_equal(repaired, logits_clean)
+    # an earlier-layer fault refreshes downstream stale X rows; the result
+    # re-verifies clean and matches the clean logits numerically
+    step0 = make_packed_serve_step(params, cfg, pb.n_slots, block_g=16,
+                                   granularity="stripe",
+                                   inject=(0, 0, 0, 64.0))
+    out_bad0, m_bad0 = step0(*args)
+    repaired0, sub0 = surgical_stripe_retry(pb, params, cfg, out_bad0,
+                                            m_bad0, block_g=16)
+    assert not sub0["abft_graph_flags"].any()
+    np.testing.assert_allclose(repaired0, logits_clean, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# (e) guard ladder + serve/stream accounting
+# ---------------------------------------------------------------------------
+
+def test_guard_slot_tier_adopts_before_stripe():
+    pb, cfg, params = _setup(seed=5, n_graphs=2)
+    args = packed_step_args(pb)
+    clean = make_packed_serve_step(params, cfg, pb.n_slots, block_g=16,
+                                   fused_network=True, granularity="slot")
+    logits_clean = np.asarray(clean(*args)[0])
+    step = make_packed_serve_step(params, cfg, pb.n_slots, block_g=16,
+                                  fused_network=True, granularity="slot",
+                                  inject=(0, 1, 0, 64.0))
+    out_bad, m_bad = step(*args)
+    runner = PackedRunner(params, cfg, 16, granularity="slot",
+                          fused_network=True)
+    guard = ABFTGuard()
+    out, m = guard.adjudicate(out_bad, m_bad, runner.retry_fn(pb),
+                              stripe_retry_fn=runner.stripe_retry_fn(pb),
+                              slot_retry_fn=runner.slot_retry_fn(pb))
+    assert np.array_equal(np.asarray(out), logits_clean)
+    assert guard.slot_retries > 0 and guard.stripe_retries == 0
+    assert guard.graph_retries == 0 and guard.recomputed_rows > 0
+    assert not bool(m["abft_flag"])
+    assert not np.asarray(m["abft_slot_flags"]).any()
+    # adoption strips the repair-only stash keys
+    assert "abft_h_layers" not in m and "abft_x_layers" not in m
+
+
+def test_guard_slot_tier_falls_back_to_stripe_then_graph():
+    """A slot_retry_fn that cannot verify must hand the (possibly
+    partially repaired) output down the ladder, not adopt it."""
+    pb, cfg, params = _setup(seed=5, n_graphs=2)
+    args = packed_step_args(pb)
+    clean = make_packed_serve_step(params, cfg, pb.n_slots, block_g=16,
+                                   fused_network=True, granularity="slot")
+    logits_clean = np.asarray(clean(*args)[0])
+    step = make_packed_serve_step(params, cfg, pb.n_slots, block_g=16,
+                                  fused_network=True, granularity="slot",
+                                  inject=(0, 1, 0, 64.0))
+    out_bad, m_bad = step(*args)
+    runner = PackedRunner(params, cfg, 16, granularity="slot",
+                          fused_network=True)
+
+    def broken_slot_retry(out, metrics):
+        sub = {"abft_graph_flags":
+               np.asarray(metrics["abft_graph_flags"], bool).copy(),
+               "abft_graph_max_rel":
+               np.asarray(metrics["abft_graph_max_rel"]).copy(),
+               "abft_stripes_recomputed": 0, "abft_rows_recomputed": 0}
+        return out, sub
+
+    guard = ABFTGuard()
+    out, m = guard.adjudicate(out_bad, m_bad, runner.retry_fn(pb),
+                              stripe_retry_fn=runner.stripe_retry_fn(pb),
+                              slot_retry_fn=broken_slot_retry)
+    assert np.array_equal(np.asarray(out), logits_clean)
+    assert guard.slot_retries == 0          # nothing was re-executed
+    assert guard.stripe_retries > 0         # the stripe tier repaired it
+    assert not bool(m["abft_flag"])
+
+
+def test_serve_stats_carry_fusion_counters():
+    from repro.launch.serve_gcn import serve
+    from repro.engine import make_packed_batches
+    stream = _stream(6, seed=2)
+    batches = make_packed_batches(stream, 3, block=16)
+    params = init_gcn(jax.random.PRNGKey(2), (8, 8, 3))
+    stats = serve(batches, params, _cfg(), verbose=False, block_g=16,
+                  fused_network=True, granularity="slot")
+    assert stats["network_hits"] == len(batches)
+    assert stats["network_fallbacks"] == 0
+    assert stats["slot_retries"] == 0
+    assert not stats["graph_flags"].any()
+
+
+def test_streaming_stats_carry_fusion_counters():
+    from repro.engine import StreamingEngine, plan_rungs
+    stream = _stream(8, seed=4)
+    rungs = plan_rungs(stream, n_slots=4, block=16)
+    params = init_gcn(jax.random.PRNGKey(4), (8, 8, 3))
+    eng = StreamingEngine(params, _cfg(), rungs, fused_network=True,
+                          granularity="slot")
+    for s, h0 in stream:
+        eng.submit(s, h0)
+    results = eng.drain()
+    stats = eng.stats(results)
+    assert stats["served"] == len(stream)
+    assert stats["network_hits"] == stats["batches"]
+    assert stats["network_fallbacks"] == 0
+    assert {"fused_hits", "fused_fallbacks"} <= set(stats)
+    assert all(not r.flag for r in results)

@@ -132,11 +132,27 @@ def test_unsupported_granularities_raise():
         per_stripe_report([scalar], cfg, 4)
 
 
-def test_inject_requires_fused_layer():
+def test_inject_validates_tuple_shape():
+    # the hook now exists on BOTH kernels (fused and two-pass), so inject
+    # no longer requires fused_layer — but a malformed tuple still raises
     pb = pack_graphs(_stream(1), block=16)
-    with pytest.raises(ValueError, match="fused_layer"):
-        make_backend(pb, _cfg(), granularity="stripe",
-                     inject=(0, 0, 0, 1.0))
+    with pytest.raises(ValueError, match="layer, stripe, slot, delta"):
+        make_backend(pb, _cfg(), granularity="stripe", inject=(0, 0, 1.0))
+
+
+def test_inject_fires_on_two_pass_path():
+    """The accumulator hook on the two-pass spmm kernel: a fused_layer=False
+    step must detect the injected fault at the right (layer, stripe) —
+    VMEM-fallback layers stay injectable."""
+    pb = pack_graphs(_stream(2, seed=11), block=16)
+    cfg = _cfg()
+    params = fold_w_r(init_gcn(jax.random.PRNGKey(11), (8, 8, 3)), cfg)
+    step = make_packed_serve_step(params, cfg, pb.n_slots, block_g=16,
+                                  granularity="stripe",
+                                  inject=(1, 0, 0, 64.0))
+    _, m = step(*_packed_args(pb))
+    sf = np.asarray(m["abft_stripe_flags"])
+    assert sf.sum() == 1 and sf[1, 0], np.argwhere(sf).tolist()
 
 
 def test_per_graph_report_dispatches_on_granularity_not_shape():
