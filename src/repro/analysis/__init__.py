@@ -1,0 +1,34 @@
+"""`abftlint` — static analysis for the GCN-ABFT serving stack.
+
+Four passes, one CLI (``python -m repro.analysis.lint``):
+
+* :mod:`repro.analysis.coverage` — jaxpr-level proof that every matmul
+  flows into an eq. 4-6 checksum comparison;
+* :mod:`repro.analysis.vmem` — the shared VMEM working-set model (also
+  the runtime fallback predicate) + static per-``pallas_call`` and
+  per-rung budget checks;
+* :mod:`repro.analysis.syncs` — AST lint for implicit host syncs,
+  unbounded jit cardinality, and mutable-default hazards in the engine
+  and launch layers;
+* :mod:`repro.analysis.lint` — the CLI tying them together and the CI
+  gate's entry point.
+
+This package is imported by ``repro.kernels.gcn_fused.ops`` (for the
+shared VMEM model), so ``__init__`` stays import-light: submodules load
+lazily.
+"""
+from __future__ import annotations
+
+import importlib
+
+_SUBMODULES = ("coverage", "vmem", "syncs", "lint")
+
+
+def __getattr__(name):
+    if name in _SUBMODULES:
+        return importlib.import_module(f"{__name__}.{name}")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_SUBMODULES))

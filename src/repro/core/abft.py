@@ -27,6 +27,7 @@ from .checksum import (
     row_checksum,
     total_checksum,
 )
+from .marker import tag_check
 
 Array = jax.Array
 
@@ -91,7 +92,13 @@ class Check:
                              f"in {GRANULARITIES}")
 
     def diff(self) -> Array:
-        return jnp.abs(self.predicted - self.actual)
+        # every report path (flag/elementwise/summarize/per_*_report)
+        # funnels through this subtraction, so routing the pair through
+        # the check-sink marker here is what lets `abftlint`'s coverage
+        # pass see "this value reached an eq. 4-6 comparison" in the
+        # jaxpr.  tag_check is identity (and a no-op outside lint traces).
+        p, a = tag_check(self.predicted, self.actual, self.granularity)
+        return jnp.abs(p - a)
 
     def flag(self, cfg: ABFTConfig) -> Array:
         d = self.diff()

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 
 from repro.core.abft import GRANULARITIES, ABFTConfig, Check, _total
 from repro.core.checksum import col_checksum
+from repro.kernels.runtime import resolve_interpret
 
 Array = jax.Array
 
@@ -288,8 +289,7 @@ class BlockEllBackend(AggregationBackend):
         self.cfg = cfg
         self.block_g = block_g
         self.partition = partition
-        self.interpret = (jax.default_backend() != "tpu"
-                          if interpret is None else interpret)
+        self.interpret = resolve_interpret(interpret)
         self.fused_layer = fused_layer
         self.fused_network = fused_network
         self.vmem_budget = vmem_budget

@@ -60,6 +60,7 @@ import numpy as np
 
 from repro.core.abft import ABFTConfig
 from repro.core.checksum import row_checksum
+from repro.kernels.runtime import resolve_interpret
 from repro.kernels.spmm_abft.layout import BlockEll
 
 log = logging.getLogger(__name__)
@@ -163,8 +164,7 @@ def surgical_stripe_retry(pb, params, cfg: ABFTConfig, out, metrics,
     when the repair could not be verified, so the guard escalates), plus
     the ``abft_rows_recomputed`` / ``abft_stripes_recomputed`` accounting.
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = resolve_interpret(interpret)
     layers = params["layers"]
     n_layers = len(layers)
     sflags = _layer_stripe_flags(
@@ -194,14 +194,14 @@ def surgical_stripe_retry(pb, params, cfg: ABFTConfig, out, metrics,
     graph_rel = np.zeros(n_slots, np.float32)
     dirty_cols: set = set()          # column blocks whose H rows changed
     for ell in range(n_layers):
-        flagged = set(np.nonzero(sflags[ell])[0].tolist())
+        flagged = set(np.nonzero(sflags[ell])[0].tolist())  # abftlint: sync-ok (post-flag repair path)
         if any(stripe_graph[s] >= n_slots for s in flagged):
             # a padding stripe's corner is 0 = 0 by construction; it
             # flagging means the batch invariants are broken — do not
             # guess, hand the step to the coarser tiers
             return escalate("padding stripe flagged")
         reach = _reachable_stripes(bell, dirty_cols)
-        reached = {s for s in np.nonzero(reach)[0].tolist()
+        reached = {s for s in np.nonzero(reach)[0].tolist()  # abftlint: sync-ok
                    if stripe_graph[s] < n_slots}
         todo = sorted(flagged | reached)
         if not todo:
@@ -223,12 +223,12 @@ def surgical_stripe_retry(pb, params, cfg: ABFTConfig, out, metrics,
         sub_out, chk = res
         rows_recomputed += len(todo) * bm
         stripes_recomputed += len(todo)
-        if bool(chk.flag(cfg)):
+        if bool(chk.flag(cfg)):  # abftlint: sync-ok
             return escalate(f"recomputed stripes still flagged at layer "
                             f"{ell}")
         _, rel = chk.elementwise(cfg)
-        rel = np.asarray(rel)
-        sub_out = np.asarray(sub_out)
+        rel = np.asarray(rel)  # abftlint: sync-ok
+        sub_out = np.asarray(sub_out)  # abftlint: sync-ok
         for k, s in enumerate(todo):
             r0 = s * bm
             rows = sub_out[k * bm:(k + 1) * bm]
@@ -238,13 +238,13 @@ def surgical_stripe_retry(pb, params, cfg: ABFTConfig, out, metrics,
                     # the spliced activations invalidate the NEXT layer's
                     # stashed combination rows — refresh them so its
                     # replay consumes the repaired operands
-                    x_layers[ell + 1][r0:r0 + bm] = np.asarray(
+                    x_layers[ell + 1][r0:r0 + bm] = np.asarray(  # abftlint: sync-ok
                         jnp.asarray(h_layers[ell + 1][r0:r0 + bm])
                         @ jnp.asarray(layers[ell + 1]["w"]))
             else:
                 repaired[r0:r0 + bm] = rows
             graph_rel[stripe_graph[s]] = max(graph_rel[stripe_graph[s]],
-                                             float(rel[k]))
+                                             float(rel[k]))  # abftlint: sync-ok
         dirty_cols = set(todo)       # square blocks: stripe s == col block s
     log.warning("ABFT: stripe-surgical repair verified clean "
                 "(%d stripes / %d rows re-executed)",
@@ -310,8 +310,7 @@ def surgical_slot_retry(pb, params, cfg: ABFTConfig, out, metrics,
     re-executes strictly fewer rows than the stripe tier whenever the
     changed-row footprint is narrower than the whole column block.
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = resolve_interpret(interpret)
     layers = params["layers"]
     n_layers = len(layers)
     slflags = _layer_slot_flags(
@@ -341,11 +340,11 @@ def surgical_slot_retry(pb, params, cfg: ABFTConfig, out, metrics,
     graph_rel = np.zeros(n_slots, np.float32)
     dirty: Dict[int, np.ndarray] = {}    # col block -> [bm] changed rows
     for ell in range(n_layers):
-        flagged = set(np.nonzero(slflags[ell].any(axis=1))[0].tolist())
+        flagged = set(np.nonzero(slflags[ell].any(axis=1))[0].tolist())  # abftlint: sync-ok (post-flag repair path)
         if any(stripe_graph[s] >= n_slots for s in flagged):
             return escalate("padding stripe flagged")
         reach = _rows_reachable_stripes(bell, dirty)
-        reached = {s for s in np.nonzero(reach)[0].tolist()
+        reached = {s for s in np.nonzero(reach)[0].tolist()  # abftlint: sync-ok
                    if stripe_graph[s] < n_slots}
         todo = sorted(flagged | reached)
         dirty = {}
@@ -364,12 +363,12 @@ def surgical_slot_retry(pb, params, cfg: ABFTConfig, out, metrics,
         sub_out, chk = res
         rows_recomputed += len(todo) * bm
         stripes_recomputed += len(todo)
-        if bool(chk.flag(cfg)):
+        if bool(chk.flag(cfg)):  # abftlint: sync-ok
             return escalate(f"recomputed stripes still flagged at layer "
                             f"{ell}")
         _, rel = chk.elementwise(cfg)
-        rel = np.asarray(rel)
-        sub_out = np.asarray(sub_out)
+        rel = np.asarray(rel)  # abftlint: sync-ok
+        sub_out = np.asarray(sub_out)  # abftlint: sync-ok
         for k, s in enumerate(todo):
             r0 = s * bm
             rows = sub_out[k * bm:(k + 1) * bm]
@@ -382,13 +381,13 @@ def surgical_slot_retry(pb, params, cfg: ABFTConfig, out, metrics,
                     # rows that actually changed can perturb downstream
                     dirty[s] = changed
                     if x_layers is not None and x_layers[ell + 1] is not None:
-                        x_layers[ell + 1][r0:r0 + bm] = np.asarray(
+                        x_layers[ell + 1][r0:r0 + bm] = np.asarray(  # abftlint: sync-ok
                             jnp.asarray(act)
                             @ jnp.asarray(layers[ell + 1]["w"]))
             else:
                 repaired[r0:r0 + bm] = rows
             graph_rel[stripe_graph[s]] = max(graph_rel[stripe_graph[s]],
-                                             float(rel[k]))
+                                             float(rel[k]))  # abftlint: sync-ok
     log.warning("ABFT: slot-surgical repair verified clean "
                 "(%d stripes / %d rows re-executed)",
                 stripes_recomputed, rows_recomputed)

@@ -13,6 +13,14 @@ from typing import List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.vmem import (  # noqa: F401  (re-exported: the runtime
+    FUSED_VMEM_BUDGET,             # fallback predicates and the abftlint
+    _lanes,                        # static checker are the SAME objects —
+    fused_layer_fits,              # see repro/analysis/vmem.py)
+    fused_network_fits,
+    fused_vmem_bytes,
+    network_vmem_bytes,
+)
 from repro.core.abft import Check
 from repro.kernels.spmm_abft.layout import BlockEll
 from repro.kernels.spmm_abft.ops import (
@@ -26,12 +34,6 @@ from repro.kernels.spmm_abft.ops import (
 from .kernel import gcn_fused_kernel, gcn_network_kernel
 
 Array = jax.Array
-
-# Conservative per-core VMEM budget for the fused layer's resident + working
-# set.  Real TPU cores have ~16 MB; half of it leaves the scheduler slack
-# for double-buffered DMA and keeps the fallback decision robust across
-# generations.
-FUSED_VMEM_BUDGET = 8 * 1024 * 1024
 
 
 def _pad_axis(a: Array, axis: int, multiple: int) -> Array:
@@ -326,37 +328,12 @@ def gcn_network_layer(bell: BlockEll, h: Array, ws: Sequence[Array],
 
 
 # ---------------------------------------------------------------------------
-# Cost models: when is fusing the right call?
+# Cost models: when is fusing the right call?  The VMEM working-set models
+# (fused_vmem_bytes / network_vmem_bytes and their *_fits predicates) live
+# in repro.analysis.vmem — imported above — so the static lint and this
+# runtime fallback share one model.  The HBM traffic models stay here:
+# they price a BlockEll layout, which the analysis layer doesn't know.
 # ---------------------------------------------------------------------------
-
-def _lanes(n: int, block_g: int) -> int:
-    return -(-n // block_g) * block_g
-
-
-def fused_vmem_bytes(f: int, g: int, bm: int, bk: int, *,
-                     block_g: int = 128, itemsize: int = 4) -> int:
-    """Model of the fused kernel's peak VMEM working set in bytes.
-
-    Resident across the grid: W [fp, gp] and w_r [fp, 1].  Per step,
-    double-buffered by the pipeline: the S tile [bm, bk] and the H tile
-    [bk, fp].  Plus the output block [bm, gp], the f32 accumulator scratch
-    [bm, gp], the extra-column scratch, and the recomputed x tile [bk, gp].
-    """
-    fp, gp = _lanes(f, block_g), _lanes(g, block_g)
-    resident = fp * gp + fp
-    streamed = 2 * (bm * bk + bk * fp)
-    working = 2 * bm * gp + bk * gp + bm * gp + 2 * bm
-    return itemsize * (resident + streamed + working)
-
-
-def fused_layer_fits(f: int, g: int, bm: int, bk: int, *,
-                     block_g: int = 128,
-                     budget: int = FUSED_VMEM_BUDGET) -> bool:
-    """True when the fused layer's working set fits the VMEM budget — the
-    engine falls back to the two-pass kernel otherwise (W too wide to stay
-    resident)."""
-    return fused_vmem_bytes(f, g, bm, bk, block_g=block_g) <= budget
-
 
 def hbm_bytes_twopass(bell: BlockEll, f: int, g: int, *,
                       block_g: int = 128, itemsize: int = 4) -> int:
@@ -398,35 +375,6 @@ def hbm_bytes_fused(bell: BlockEll, f: int, g: int, *,
                        + nbm * bm * gp + nbm + nbm * bm)
 
 
-def network_vmem_bytes(dims: Sequence[int], bm: int, rows: int, *,
-                       block_g: int = 128, itemsize: int = 4) -> int:
-    """Model of the whole-network kernel's peak VMEM working set.
-
-    Dominant term: the two ping-pong activation buffers [rows, P] that keep
-    the whole activation matrix resident across layer boundaries (absent
-    for a single layer).  Resident per layer: one W slab [P, P] + w_r [P].
-    Per step, double-buffered: the S tile and (layer 0 only, but the
-    pipeline allocates it throughout) the H0 tile.  Plus the output block,
-    the f32 accumulator, the recomputed x tile, and the extra column.
-    """
-    p = _lanes(max(dims), block_g)
-    n_layers = len(dims) - 1
-    act = 2 * rows * p if n_layers > 1 else 0
-    resident = p * p + p
-    streamed = 2 * (bm * bm + bm * p)
-    working = 2 * bm * p + bm * p + bm * p + 2 * bm
-    return itemsize * (act + resident + streamed + working)
-
-
-def fused_network_fits(dims: Sequence[int], bm: int, rows: int, *,
-                       block_g: int = 128,
-                       budget: int = FUSED_VMEM_BUDGET) -> bool:
-    """True when the whole-network working set — activation ping-pong
-    buffers included — fits the VMEM budget; the engine falls back to
-    per-layer fused (then two-pass) otherwise."""
-    return network_vmem_bytes(dims, bm, rows, block_g=block_g) <= budget
-
-
 def hbm_bytes_network(bell: BlockEll, dims: Sequence[int], *,
                       block_g: int = 128, stash_acts: bool = False,
                       itemsize: int = 4) -> int:
@@ -463,7 +411,8 @@ def hbm_bytes_network(bell: BlockEll, dims: Sequence[int], *,
 def gcn_fused_auto(bell: BlockEll, h: Array, w: Array,
                    w_r: Optional[Array] = None, *, block_g: int = 128
                    ) -> Tuple[Array, Optional[Check]]:
-    """Same as :func:`gcn_fused_layer`, interpret-mode off-TPU."""
-    on_tpu = jax.default_backend() == "tpu"
+    """Same as :func:`gcn_fused_layer`, interpret mode resolved by
+    :func:`repro.kernels.runtime.resolve_interpret`."""
+    from repro.kernels.runtime import resolve_interpret
     return gcn_fused_layer(bell, h, w, w_r, block_g=block_g,
-                           interpret=not on_tpu)
+                           interpret=resolve_interpret())

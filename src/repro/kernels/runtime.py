@@ -1,0 +1,42 @@
+"""Shared kernel-runtime policy knobs.
+
+:func:`resolve_interpret` is the ONE place the "should Pallas run in
+interpret mode?" decision lives.  It used to be re-derived as
+``jax.default_backend() != "tpu"`` at six call sites (both localize
+retry builders, the streaming serve step, the block-ELL backend, and
+the two ``*_auto`` kernel wrappers); abftlint's sync pass exempts this
+module by construction, and every other backend query in a hot path is
+a finding.
+
+Resolution order:
+
+1. an explicit ``interpret=`` argument (tests and benchmarks pass one);
+2. the ``REPRO_PALLAS_INTERPRET`` environment variable (``0``/``false``
+   forces compiled, anything else forces interpret) — the escape hatch
+   for forcing either mode on unusual hosts without threading a flag
+   through every layer;
+3. the backend default: interpret everywhere but TPU (CPU/GPU have no
+   Pallas TPU backend to compile for).
+
+The result is always a plain ``bool``, safe as a jit static argument.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+_ENV = "REPRO_PALLAS_INTERPRET"
+_FALSY = ("0", "false", "no", "off", "")
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve an ``interpret`` override to a concrete bool (see module
+    docstring for the precedence)."""
+    if interpret is not None:
+        return bool(interpret)
+    env = os.environ.get(_ENV)
+    if env is not None:
+        return env.strip().lower() not in _FALSY
+    return jax.default_backend() != "tpu"  # abftlint: backend-query-ok

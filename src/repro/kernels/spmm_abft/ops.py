@@ -196,9 +196,11 @@ def spmm_abft_packed(cols: jax.Array, vals: jax.Array, x: jax.Array,
 def spmm_abft_auto(bell: BlockEll, x: jax.Array,
                    xr: Optional[jax.Array] = None, *, block_g: int = 128
                    ) -> Tuple[jax.Array, Check]:
-    """Same as :func:`spmm_abft`, interpret-mode off-TPU (CPU fallback)."""
-    on_tpu = jax.default_backend() == "tpu"
-    return spmm_abft(bell, x, xr, block_g=block_g, interpret=not on_tpu)
+    """Same as :func:`spmm_abft`, interpret mode resolved by
+    :func:`repro.kernels.runtime.resolve_interpret`."""
+    from repro.kernels.runtime import resolve_interpret
+    return spmm_abft(bell, x, xr, block_g=block_g,
+                     interpret=resolve_interpret())
 
 
 def gcn_layer_fused_sparse_kernel(bell: BlockEll, h: jax.Array, w: jax.Array,

@@ -18,5 +18,5 @@ def xla_cost_analysis(compiled) -> Dict[str, float]:
     merged: Dict[str, float] = {}
     for props in ca:
         for key, val in props.items():
-            merged[key] = merged.get(key, 0.0) + float(val)
+            merged[key] = merged.get(key, 0.0) + float(val)  # abftlint: sync-ok (offline cost table)
     return merged

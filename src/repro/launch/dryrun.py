@@ -60,7 +60,7 @@ def _shape_bytes(type_str: str) -> int:
         n = 1
         for d in dims.split(","):
             if d:
-                n *= int(d)
+                n *= int(d)  # abftlint: sync-ok (offline dry run)
         total += n * _DTYPE_BYTES[dt]
     return total
 

@@ -63,7 +63,7 @@ def main() -> None:
     for i in range(args.new - 1):
         logits, states, m = decode(params, states, tok,
                                    jnp.asarray(pos0 + i, jnp.int32))
-        flags += int(bool(m["abft_flag"]))
+        flags += int(bool(m["abft_flag"]))  # abftlint: sync-ok (benchmark result collection)
         tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
     dt = time.time() - t0
     print(f"decode: {args.new - 1} steps in {dt:.2f}s "
