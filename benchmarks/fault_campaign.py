@@ -1,0 +1,23 @@
+"""Chaos campaign benchmark: fault-model sweep over the ABFT stack.
+
+Thin delegate to :mod:`repro.launch.campaign` so the campaign sits in
+the benchmarks/ catalog next to the fault-detection table and the
+serving benchmarks (same CLI, same ``BENCH_fault_campaign.json``
+payload, same interpret/authoritative stamping):
+
+    PYTHONPATH=src python -m benchmarks.fault_campaign --smoke \
+        --assert-gates
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.launch.campaign import main as _main
+
+
+def main(argv: Optional[Sequence[str]] = None) -> dict:
+    return _main(argv)
+
+
+if __name__ == "__main__":
+    main()

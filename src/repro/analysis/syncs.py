@@ -53,7 +53,8 @@ _BACKEND_QUERIES = {"default_backend", "devices", "local_devices"}
 
 _SUPPRESS_RE = re.compile(r"#\s*abftlint:\s*([a-z0-9_,\- ]+)")
 
-DEFAULT_SCAN_DIRS = ("src/repro/engine", "src/repro/launch")
+DEFAULT_SCAN_DIRS = ("src/repro/engine", "src/repro/launch",
+                     "src/repro/faults")
 # the single blessed resolution site for backend queries
 EXEMPT_FILES = ("kernels/runtime.py",)
 

@@ -101,18 +101,23 @@ class Check:
         return jnp.abs(p - a)
 
     def flag(self, cfg: ABFTConfig) -> Array:
+        # NaN-safe: a NaN divergence (corrupted checksum path — a bit
+        # flip in w_r/s_c/the carried eq.-5 column propagating to pred)
+        # must FLAG.  ``d > tau`` is False for NaN, which would silently
+        # disable ABFT, so the comparison is negated: not (d <= tau).
         d = self.diff()
         if cfg.relative:
             scale = jnp.maximum(1.0, jnp.abs(self.actual))
-            return jnp.any(d > cfg.threshold * scale)
-        return jnp.any(d > cfg.threshold)
+            return jnp.any(~(d <= cfg.threshold * scale))
+        return jnp.any(~(d <= cfg.threshold))
 
     def elementwise(self, cfg: ABFTConfig) -> tuple[Array, Array]:
         """Per-element (flags, rel divergence) — the shared reduction core
-        of :func:`per_graph_report` / :func:`per_stripe_report`."""
+        of :func:`per_graph_report` / :func:`per_stripe_report`.  NaN-safe
+        like :meth:`flag`: a NaN comparison flags its element."""
         d = self.diff()
         scale = jnp.maximum(1.0, jnp.abs(self.actual))
-        f = d > cfg.threshold * (scale if cfg.relative else 1.0)
+        f = ~(d <= cfg.threshold * (scale if cfg.relative else 1.0))
         return f, (d / scale).astype(jnp.float32)
 
     def tree_flatten(self):

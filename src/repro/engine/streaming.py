@@ -46,6 +46,7 @@ checks, and retry ladders.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -61,6 +62,8 @@ from repro.kernels.runtime import resolve_interpret
 from repro.engine.batching import GraphBatch, PackedGraphs, \
     graph_pack_stats, pack_graphs
 from repro.runtime import ABFTGuard
+
+log = logging.getLogger(__name__)
 
 
 # ---------------------------------------------------------------------------
@@ -193,13 +196,18 @@ class PackedRunner:
     def __init__(self, params, cfg: ABFTConfig, block_g: int,
                  fused_layer: bool = False, granularity: str = "graph",
                  fused_network: bool = False,
-                 vmem_budget: Optional[int] = None):
+                 vmem_budget: Optional[int] = None,
+                 inject=None):
         self.params, self.cfg = params, cfg
         self.block_g = block_g
         self.fused_layer = fused_layer
         self.fused_network = fused_network
         self.vmem_budget = vmem_budget
         self.granularity = granularity
+        # chaos hook: the kernel accumulator fault (layer, stripe, slot,
+        # delta), baked into every step this runner builds — the fault-
+        # campaign / e2e degrade tests' device-side injection surface
+        self.inject = inject
         self._steps = {}
 
     @property
@@ -216,7 +224,8 @@ class PackedRunner:
                 fused_layer=self.fused_layer,
                 fused_network=self.fused_network,
                 vmem_budget=self.vmem_budget,
-                granularity=self.granularity)
+                granularity=self.granularity,
+                inject=self.inject)
         return self._steps[key]
 
     def _budget(self) -> int:
@@ -527,6 +536,26 @@ class StreamingEngine:
     bins fill, ``pump`` applies the flush deadline to a trickle stream,
     ``drain`` flushes everything and adjudicates the tail.  Completed
     verdicts are collected with ``take_results``.
+
+    **Robustness wiring (PR 9).**  The engine owns a *backend degrade
+    ladder* — level 0 is the configured backend (fused-network or
+    fused-layer), falling back to the two-pass packed path and finally to
+    the dense batched engine.  Three signals advance the ladder, each
+    after draining the in-flight batch and checkpointing via the
+    ``checkpoint/`` machinery: (a) an unverifiable batch (the guard's
+    persistent-fault escalation raised — the batch is re-dispatched on
+    the fallback, so nothing is dropped), (b) eviction advice
+    (``guard.suspect`` from sticky-site classification, or
+    ``guard.should_evict()`` flag-rate), and (c) a
+    ``StragglerWatchdog`` slow-streak around dispatch->adjudication
+    (``watchdog=``), with ``hang_timeout=`` forcing adjudication of a
+    wedged in-flight batch from ``pump``.  ``selfcheck_interval=`` adds
+    the check-the-check cadence: every N dispatches the folded ``w_r``
+    operands are re-derived bitwise (:mod:`repro.faults.selfcheck`) and
+    a mismatch refolds + rebuilds the jitted steps.  ``inject=`` is the
+    level-0 chaos hook (the kernel accumulator fault) — degraded levels
+    are always built clean, which is what lets the ladder actually
+    recover from a sticky backend fault in the e2e tests.
     """
 
     def __init__(self, params, cfg: ABFTConfig, rungs: RungTable, *,
@@ -540,6 +569,11 @@ class StreamingEngine:
                  vmem_budget: Optional[int] = None,
                  granularity: str = "graph",
                  keep_logits: bool = True,
+                 inject=None,
+                 watchdog=None,
+                 hang_timeout: Optional[float] = None,
+                 checkpoint_dir: Optional[str] = None,
+                 selfcheck_interval: Optional[int] = None,
                  clock: Callable[[], float] = time.perf_counter):
         if oversize_policy not in ("singleton", "reject"):
             raise ValueError(f"oversize_policy {oversize_policy!r} not in "
@@ -549,16 +583,49 @@ class StreamingEngine:
                              f"('graph', 'stripe', 'slot')")
         if queue_capacity < 1:
             raise ValueError("queue_capacity must be >= 1")
+        if hang_timeout is not None and hang_timeout <= 0:
+            raise ValueError("hang_timeout must be > 0 (or None)")
         self.cfg = cfg
         self.rungs = rungs
         self.params = fold_w_r(params, cfg)
-        self.runner = PackedRunner(self.params, cfg,
-                                   rungs.block if block_g is None
-                                   else block_g,
-                                   fused_layer, granularity,
-                                   fused_network=fused_network,
-                                   vmem_budget=vmem_budget)
+        self.vmem_budget = vmem_budget
+        self._block_g = rungs.block if block_g is None else block_g
+        self._inject = inject
+        # the backend degrade ladder: level 0 is the configured backend
+        # (and the only level carrying the chaos inject hook); fusion
+        # levels fall back to the two-pass packed path, which falls back
+        # to the dense batched engine — the terminal, simplest backend.
+        name0 = ("fused-network" if fused_network else
+                 "fused-layer" if fused_layer else "two-pass")
+        ladder = [{"name": name0, "fused_layer": fused_layer,
+                   "fused_network": fused_network, "dense": False}]
+        if fused_layer or fused_network:
+            ladder.append({"name": "two-pass", "fused_layer": False,
+                           "fused_network": False, "dense": False})
+        ladder.append({"name": "dense", "fused_layer": False,
+                       "fused_network": False, "dense": True})
+        self._ladder = ladder
+        self._degrade_level = 0
+        self._level_runners: Dict[int, PackedRunner] = {}
+        self._dense_step_fn = None
+        self._dense_shapes: set = set()
+        self._retired_compiles = 0
         self.guard = guard if guard is not None else ABFTGuard()
+        self.watchdog = watchdog
+        self.hang_timeout = hang_timeout
+        self._ckpt = None
+        if checkpoint_dir is not None:
+            from repro.checkpoint.ckpt import CheckpointManager
+            # synchronous writes: the save happens at the degrade moment,
+            # where a half-written checkpoint racing the backend swap is
+            # the last thing anyone wants
+            self._ckpt = CheckpointManager(checkpoint_dir, keep=3,
+                                           async_write=False)
+        self._selfcheck = None
+        if selfcheck_interval is not None:
+            from repro.faults.selfcheck import CheckPathSelfCheck
+            self._selfcheck = CheckPathSelfCheck(cfg,
+                                                 interval=selfcheck_interval)
         self.queue_capacity = queue_capacity
         self.flush_deadline = flush_deadline
         self.oversize_policy = oversize_policy
@@ -566,13 +633,17 @@ class StreamingEngine:
         self.keep_logits = keep_logits
         self.clock = clock
         self._bins: Dict[Rung, _OpenBin] = {}
-        self._inflight: Optional[Tuple[PackedGraphs, Any, Any,
-                                       List[int]]] = None
+        # one in-flight batch, tagged by dispatch kind:
+        #   {"kind": "packed", "runner", "pb", "out", "metrics", "rids"}
+        #   {"kind": "dense", "step", "batch", "items", "out", "metrics",
+        #    "rids"}
+        self._inflight: Optional[Dict[str, Any]] = None
+        self._inflight_t: Optional[float] = None
         self._results: Dict[int, RequestResult] = {}
         self._done: List[RequestResult] = []
         # adjudicated batches whose logits / max_rel are still device
         # arrays; materialized lazily in take_results (the stats flush)
-        self._pending_mat: List[Tuple[Any, Any, PackedGraphs,
+        self._pending_mat: List[Tuple[str, Any, Any, Any,
                                       List[Tuple[int, RequestResult]]]] = []
         self._next_rid = 0
         self.submitted = 0
@@ -585,6 +656,120 @@ class StreamingEngine:
         self.fused_fallbacks = 0
         self.network_hits = 0
         self.network_fallbacks = 0
+        self.degrades = 0
+        self.failovers = 0
+        self.dense_dispatches = 0
+        self.hang_flushes = 0
+        self.selfcheck_repairs = 0
+        self._runner_for(0)           # eager level-0 runner (warmup path)
+
+    # -- backend ladder ----------------------------------------------------
+
+    @property
+    def runner(self) -> PackedRunner:
+        """The ACTIVE packed runner (the deepest packed level once the
+        ladder has degraded all the way to dense)."""
+        last_packed = len(self._ladder) - 2
+        return self._runner_for(min(self._degrade_level, last_packed))
+
+    def _runner_for(self, level: int) -> PackedRunner:
+        spec = self._ladder[level]
+        if spec["dense"]:
+            raise ValueError("the dense ladder level has no packed runner")
+        if level not in self._level_runners:
+            self._level_runners[level] = PackedRunner(
+                self.params, self.cfg, self._block_g,
+                spec["fused_layer"], self.granularity,
+                fused_network=spec["fused_network"],
+                vmem_budget=self.vmem_budget,
+                inject=self._inject if level == 0 else None)
+        return self._level_runners[level]
+
+    def _at_last_level(self) -> bool:
+        return self._degrade_level >= len(self._ladder) - 1
+
+    def _active_dense(self) -> bool:
+        return self._ladder[self._degrade_level]["dense"]
+
+    def _degrade(self, reason: str) -> None:
+        """Swap to the next ladder level: checkpoint the folded params,
+        advance, and reset the guard's per-backend state (its site
+        classifications and rolling window describe the replaced
+        execution path — lifetime counters stand)."""
+        old = self._ladder[self._degrade_level]["name"]
+        self._checkpoint(reason)
+        self._degrade_level += 1
+        self.degrades += 1
+        self.guard.reset_backend_state()
+        if self.watchdog is not None:
+            # the streak judged the replaced backend; the fallback gets a
+            # fresh verdict (the EWMA itself carries over: step-time scale
+            # is a property of the workload more than the backend)
+            self.watchdog.slow_streak = 0
+        log.error("stream: degrading backend %s -> %s (%s); continuing "
+                  "to serve", old,
+                  self._ladder[self._degrade_level]["name"], reason)
+
+    def _checkpoint(self, reason: str) -> None:
+        if self._ckpt is None:
+            return
+        self._ckpt.save(self.batches_dispatched, self.params,
+                        extra={"reason": reason,
+                               "backend":
+                                   self._ladder[self._degrade_level]["name"],
+                               "degrade_level": self._degrade_level})
+
+    def _failover(self, inf: Dict[str, Any], reason: str) -> None:
+        """A batch the guard could not verify on this backend (persistent
+        fault with the retry tiers and restore path exhausted): degrade
+        and re-dispatch the SAME requests on the fallback, so the stream
+        keeps serving with nothing dropped.  Raises only when the ladder
+        is exhausted — the dense terminal backend failed too."""
+        if self._at_last_level():
+            raise RuntimeError(
+                f"stream: backend ladder exhausted at "
+                f"{self._ladder[-1]['name']!r} — {reason}")
+        self.failovers += 1
+        self._degrade(f"unverifiable batch: {reason}")
+        now = self.clock()
+        items = (list(inf["pb"].items) if inf["kind"] == "packed"
+                 else inf["items"])
+        rids = inf["rids"]
+        if self._active_dense():
+            self._dispatch_dense(items, rids, now)
+        else:
+            # packed operands are backend-independent: the same block-ELL
+            # pack re-runs through the degraded level's kernels
+            self._dispatch(inf["pb"], rids, now)
+
+    # -- check-the-check ---------------------------------------------------
+
+    def _maybe_selfcheck(self) -> None:
+        """Sampled-cadence self-check of the checksum operands: re-derive
+        every folded w_r bitwise; a mismatch means the CHECK path is
+        corrupt (every verdict a lie), so refold and rebuild the jitted
+        steps that baked the stale fold in at trace time."""
+        if self._selfcheck is None:
+            return
+        bad = self._selfcheck.maybe_check(self.params,
+                                          self.batches_dispatched)
+        if bad:
+            log.error("stream: check-path self-check tripped on layer(s) "
+                      "%s — refolding w_r and rebuilding serve steps", bad)
+            self.params = self._selfcheck.repair(self.params)
+            self.selfcheck_repairs += 1
+            self._rebuild_steps()
+
+    def _rebuild_steps(self) -> None:
+        """Discard every jitted step after a params repair (steps bake the
+        params as trace-time constants); compile accounting stays
+        cumulative so the bounded-compile contract still reports honestly."""
+        self._retired_compiles += (
+            sum(r.compile_count for r in self._level_runners.values())
+            + len(self._dense_shapes))
+        self._level_runners = {}
+        self._dense_step_fn = None
+        self._dense_shapes = set()
 
     # -- intake ------------------------------------------------------------
 
@@ -650,10 +835,22 @@ class StreamingEngine:
         return rid
 
     def pump(self, now: Optional[float] = None) -> None:
-        """Advance time-driven work: flush bins past the deadline.  Call
+        """Advance time-driven work: flush bins past the deadline, and
+        force adjudication of an in-flight batch that has been pending
+        past ``hang_timeout`` (a hung dispatch must resolve — blocking on
+        the device sync surfaces the wedge to the guard/watchdog instead
+        of letting the stream silently stall behind it).  Call
         periodically on a trickle stream (the driver calls it between
         arrivals)."""
-        self._sweep_deadlines(self.clock() if now is None else now)
+        now = self.clock() if now is None else now
+        if (self.hang_timeout is not None and self._inflight is not None
+                and self._inflight_t is not None
+                and now - self._inflight_t >= self.hang_timeout):
+            self.hang_flushes += 1
+            log.warning("stream: in-flight batch pending > hang_timeout="
+                        "%.3fs; forcing adjudication", self.hang_timeout)
+            self._resolve_inflight()
+        self._sweep_deadlines(now)
 
     def drain(self, now: Optional[float] = None) -> List[RequestResult]:
         """Seal every open bin, adjudicate everything in flight, and return
@@ -661,7 +858,7 @@ class StreamingEngine:
         now = self.clock() if now is None else now
         for rung in list(self._bins):
             self._seal(rung, now)
-        self._resolve_inflight()
+        self._drain_inflight()
         return self.take_results()
 
     def take_results(self) -> List[RequestResult]:
@@ -692,6 +889,12 @@ class StreamingEngine:
                 f"rung is {self.rungs.rungs[-1]}", now)
             self.rejected_oversize += 1
             return
+        if self._active_dense():
+            # degraded to the terminal backend: the dense engine has no
+            # rung limit, just its own power-of-two bucket ladder
+            self.singleton_dispatches += 1
+            self._dispatch_dense([(s, h0)], [rid], now)
+            return
         # dedicated singleton shape: power-of-two quantized so repeat
         # offenders share compiles; the request still runs fully checked
         sq, wq = self.rungs.stripe_multiple, self.rungs.width_multiple
@@ -717,7 +920,11 @@ class StreamingEngine:
         # pack on the host FIRST (overlaps the in-flight batch's device
         # execution), then adjudicate the previous batch, then dispatch
         rids = [rid for rid, _, _ in b.items]
-        pb = pack_graphs([(s, h0) for _, s, h0 in b.items],
+        items = [(s, h0) for _, s, h0 in b.items]
+        if self._active_dense():
+            self._dispatch_dense(items, rids, now)
+            return
+        pb = pack_graphs(items,
                          block=self.rungs.block, n_slots=rung.n_slots,
                          stripe_multiple=self.rungs.stripe_multiple,
                          width_multiple=self.rungs.width_multiple,
@@ -725,33 +932,120 @@ class StreamingEngine:
                          width_cap=rung.width_cap, indices=rids)
         self._dispatch(pb, rids, now)
 
+    def _drain_inflight(self) -> None:
+        """Resolve the in-flight batch AND any batch a failover re-
+        dispatched in its place, until the line is clear: a dispatcher
+        about to install its own in-flight entry must never clobber an
+        unresolved one (the re-dispatched batch would silently never be
+        adjudicated and its requests would hang)."""
+        while self._inflight is not None:
+            self._resolve_inflight()
+
     def _dispatch(self, pb: PackedGraphs, rids: List[int],
                   now: float) -> None:
-        self._resolve_inflight()
-        step = self.runner.step_for(pb)
+        self._drain_inflight()
+        if self._active_dense():
+            # the resolution above degraded the ladder to its terminal
+            # level mid-seal; this batch must follow, not run packed on
+            # the replaced backend
+            self._dispatch_dense(list(pb.items), rids, now)
+            return
+        self._maybe_selfcheck()
+        runner = self.runner
+        step = runner.step_for(pb)
         out, metrics = step(*packed_step_args(pb))   # async dispatch
         t = self.clock()
         for rid in rids:
             self._results[rid].t_dispatch = t
         self.batches_dispatched += 1
-        for key, n in self.runner.fusion_counts(pb).items():
+        for key, n in runner.fusion_counts(pb).items():
             setattr(self, key, getattr(self, key) + n)
-        self._inflight = (pb, out, metrics, rids)
+        self._inflight = {"kind": "packed", "runner": runner, "pb": pb,
+                          "out": out, "metrics": metrics, "rids": rids}
+        self._inflight_t = t
+        if self.watchdog is not None:
+            self.watchdog.start()
+
+    def _dispatch_dense(self, items: List[Tuple[np.ndarray, np.ndarray]],
+                        rids: List[int], now: float) -> None:
+        """Terminal ladder level: serve a bin through the dense batched
+        engine.  Slot count and node bucket quantize up the power-of-two
+        ladder so repeat shapes share compiles; pad slots are all-zero
+        graphs, which contribute 0 = 0 to every check and can never
+        flag."""
+        self._drain_inflight()
+        self._maybe_selfcheck()
+        k = len(items)
+        pad = next_pow2(k)
+        bucket = next_pow2(max(s.shape[0] for s, _ in items))
+        feat = items[0][1].shape[1]
+        dt = np.result_type(*[s.dtype for s, _ in items])
+        sub_s = np.zeros((pad, bucket, bucket), dt)
+        sub_h = np.zeros((pad, bucket, feat),
+                         np.result_type(*[h.dtype for _, h in items]))
+        n_nodes = np.zeros(pad, np.int64)
+        for i, (s, h0) in enumerate(items):
+            n = s.shape[0]
+            sub_s[i, :n, :n] = s
+            sub_h[i, :n] = h0
+            n_nodes[i] = n
+        b = GraphBatch(s=sub_s, h0=sub_h, n_nodes=n_nodes, bucket=bucket,
+                       indices=np.array(rids + [-1] * (pad - k)))
+        if self._dense_step_fn is None:
+            self._dense_step_fn = make_serve_step(self.params, self.cfg)
+        self._dense_shapes.add((pad, bucket, feat))
+        step = self._dense_step_fn
+        out, metrics = step(jnp.asarray(b.s), jnp.asarray(b.h0))
+        t = self.clock()
+        for rid in rids:
+            self._results[rid].t_dispatch = t
+        self.batches_dispatched += 1
+        self.dense_dispatches += 1
+        self._inflight = {"kind": "dense", "step": step, "batch": b,
+                          "items": list(items), "out": out,
+                          "metrics": metrics, "rids": rids}
+        self._inflight_t = t
+        if self.watchdog is not None:
+            self.watchdog.start()
 
     def _resolve_inflight(self) -> None:
         if self._inflight is None:
             return
-        pb, out, metrics, rids = self._inflight
+        inf = self._inflight
         self._inflight = None
-        stripe_retry = (self.runner.stripe_retry_fn(pb)
-                        if self.granularity in ("stripe", "slot") else None)
-        slot_retry = (self.runner.slot_retry_fn(pb)
-                      if self.granularity == "slot" else None)
-        step = self.runner.step_for(pb)
-        out, metrics = self.guard.adjudicate(
-            out, metrics, self.runner.retry_fn(pb),
-            stripe_retry_fn=stripe_retry, slot_retry_fn=slot_retry,
-            replay=(step, packed_step_args(pb)))
+        self._inflight_t = None
+        rids = inf["rids"]
+        try:
+            if inf["kind"] == "packed":
+                runner, pb = inf["runner"], inf["pb"]
+                stripe_retry = (runner.stripe_retry_fn(pb)
+                                if self.granularity in ("stripe", "slot")
+                                else None)
+                slot_retry = (runner.slot_retry_fn(pb)
+                              if self.granularity == "slot" else None)
+                step = runner.step_for(pb)
+                out, metrics = self.guard.adjudicate(
+                    inf["out"], inf["metrics"], runner.retry_fn(pb),
+                    stripe_retry_fn=stripe_retry,
+                    slot_retry_fn=slot_retry,
+                    replay=(step, packed_step_args(pb)))
+            else:
+                step, b = inf["step"], inf["batch"]
+                out, metrics = self.guard.adjudicate(
+                    inf["out"], inf["metrics"], dense_retry_fn(step, b),
+                    replay=(step, (jnp.asarray(b.s), jnp.asarray(b.h0))))
+        except RuntimeError as err:
+            # the guard refused to adopt this batch on this backend
+            # (persistent fault, restore path exhausted or absent):
+            # degrade the ladder and re-dispatch the same requests there
+            if self.watchdog is not None:
+                self.watchdog.stop()
+            self._failover(inf, str(err))
+            return
+        slow_streak = False
+        if self.watchdog is not None:
+            self.watchdog.stop()
+            slow_streak = self.watchdog.should_reshard()
         t = self.clock()
         # the verdict itself costs one bounded host read per batch: the
         # guard just adjudicated on these same graph flags, so this
@@ -771,32 +1065,59 @@ class StreamingEngine:
         # transfer mid-stream.  They stay device-side until the caller
         # collects results (take_results), by which point the transfer
         # overlaps nothing.
-        self._pending_mat.append((out, metrics.get("abft_graph_max_rel"),
-                                  pb, batch))
+        payload = inf["pb"] if inf["kind"] == "packed" else inf["batch"]
+        self._pending_mat.append((inf["kind"], out,
+                                  metrics.get("abft_graph_max_rel"),
+                                  payload, batch))
+        # eviction advice: a suspect guard (persistent site classified),
+        # an over-threshold rolling flag rate, or a straggling-dispatch
+        # streak all advise swapping this backend.  The in-flight batch
+        # just drained, so checkpoint + degrade NOW and keep serving on
+        # the fallback.
+        advice = []
+        if self.guard.suspect:
+            advice.append("guard suspect (persistent site classified)")
+        elif self.guard.should_evict():
+            advice.append("guard flag rate over evict threshold")
+        if slow_streak:
+            advice.append("watchdog slow-dispatch streak")
+        if advice and not self._at_last_level():
+            self._degrade("eviction advice: " + "; ".join(advice))
 
     def _materialize_pending(self) -> None:
         """The deferred device->host flush: one bulk transfer per
         adjudicated batch instead of per-request ``float()``/slice syncs
         in the dispatch hot loop."""
-        for out, grel, pb, batch in self._pending_mat:
+        for kind, out, grel, payload, batch in self._pending_mat:
             out_np = np.asarray(out) if self.keep_logits else None  # abftlint: sync-ok
-            grel_np = (np.zeros(pb.n_slots, np.float32) if grel is None
+            n_slots = (payload.n_slots if kind == "packed"
+                       else payload.s.shape[0])
+            grel_np = (np.zeros(n_slots, np.float32) if grel is None
                        else np.asarray(grel, np.float32))  # abftlint: sync-ok
             for k, res in batch:
                 res.max_rel = float(grel_np[k])  # abftlint: sync-ok (host array, stats flush)
-                if out_np is not None:
-                    o, n = pb.row_offsets[k], pb.n_nodes[k]
+                if out_np is None:
+                    continue
+                if kind == "packed":
+                    o, n = payload.row_offsets[k], payload.n_nodes[k]
                     res.logits = out_np[o:o + n].copy()
+                else:
+                    res.logits = out_np[k, :payload.n_nodes[k]].copy()
         self._pending_mat = []
 
     # -- accounting --------------------------------------------------------
 
     @property
     def compile_count(self) -> int:
-        """Distinct jitted packed shapes built so far — the bounded-compile
+        """Distinct jitted step shapes built so far, summed over every
+        ladder level's runner plus the dense fallback's shape set (and the
+        steps retired by a self-check rebuild) — the bounded-compile
         contract compares this against ``len(self.rungs)`` (+ the O(log)
-        singleton/retry ladder shapes when those paths fired)."""
-        return self.runner.compile_count
+        singleton/retry/degrade ladder shapes when those paths fired)."""
+        return (self._retired_compiles
+                + sum(r.compile_count
+                      for r in self._level_runners.values())
+                + len(self._dense_shapes))
 
     def stats(self, results: Optional[Sequence[RequestResult]] = None
               ) -> Dict[str, Any]:
@@ -833,4 +1154,21 @@ class StreamingEngine:
             "fused_fallbacks": self.fused_fallbacks,
             "network_hits": self.network_hits,
             "network_fallbacks": self.network_fallbacks,
+            "repair_tiers": (self.guard.repair_tiers()
+                             if hasattr(self.guard, "repair_tiers")
+                             else {}),
+            "backend_ladder": [lv["name"] for lv in self._ladder],
+            "active_backend": self._ladder[self._degrade_level]["name"],
+            "degrade_level": self._degrade_level,
+            "degrades": self.degrades,
+            "failovers": self.failovers,
+            "dense_dispatches": self.dense_dispatches,
+            "hang_flushes": self.hang_flushes,
+            "watchdog_events": (self.watchdog.events
+                                if self.watchdog is not None else 0),
+            "selfcheck_runs": (self._selfcheck.checks_run
+                               if self._selfcheck is not None else 0),
+            "selfcheck_trips": (self._selfcheck.trips
+                                if self._selfcheck is not None else 0),
+            "selfcheck_repairs": self.selfcheck_repairs,
         }

@@ -1,0 +1,436 @@
+"""Chaos-campaign driver: sweep fault models across sites x kinds and
+measure what the eq. 4-6 checks actually catch.
+
+Each experiment runs one :class:`~repro.faults.model.FaultModel` against a
+deterministic synthetic serving workload and classifies every step:
+
+* **detected**      — data-path corruption active AND the online check
+  flagged (true positive); detection latency is steps from first firing
+  to first flag.
+* **sdc**           — data-path corruption active, outputs diverged from
+  the clean reference, NO flag: a silent data corruption (the measured
+  false-negative class — ``features``/``cols_table`` corrupt both sides
+  of the check consistently, so ABFT is architecturally blind there and
+  the campaign *measures* rather than asserts).
+* **masked**        — corruption fired but the outputs match the clean
+  reference bitwise (the flip landed somewhere the forward never used).
+* **false_positive** — flag with clean data.  Finite check-path
+  corruption (``w_r``/``s_c``) lands here by construction: the data path
+  is untouched, every verdict is a lie.  The periodic self-check
+  (:mod:`repro.faults.selfcheck`) is the defense, and the campaign
+  records its detections separately.
+* **would-be false negative** — check-path corruption where the NAIVE
+  comparison (``d > tau``: False for NaN) reports clean.  The shipped
+  NaN-safe comparison (``~(d <= tau*scale)``) flags it, and the
+  self-check catches the corruption at its root; the campaign reports
+  the naive verdict recomputed host-side so the report shows what a
+  naive implementation would have silently missed.
+
+Every flagged step is also adjudicated through a real
+:class:`~repro.runtime.ABFTGuard` so the campaign reports the
+repair-tier distribution (slot/stripe/graph/restore + persistent-site
+escalations): retries re-read CLEAN operands for transient kinds and the
+CORRUPTED operands for sticky kinds — a stuck-at cell re-corrupts every
+re-execution, which is exactly what drives the guard's persistent
+classification and the streaming engine's backend degrade.
+
+All forwards are eager (no jit): the campaign is a measurement harness,
+not a serving benchmark, and eager replay keeps it deterministic with
+zero compile-cache interactions.  The packed block-ELL path serves every
+site except ``s_c`` (a dense/BCOO-path operand), which runs per-graph
+dense forwards.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.abft import ABFTConfig, per_graph_report, summarize
+from repro.faults.injectors import FaultInjector
+from repro.faults.model import CHECK_PATH_SITES, FaultModel, sweep_models
+from repro.faults.selfcheck import verify_s_c, verify_w_r
+from repro.runtime import ABFTGuard, GuardConfig
+
+
+# ---------------------------------------------------------------------------
+# eager forwards
+# ---------------------------------------------------------------------------
+
+def _packed_forward(params, cfg: ABFTConfig, pb, *, block_g: int,
+                    interpret: bool, inject=None, cols=None, h0=None
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """One eager packed step: (logits, per-graph flags, per-graph max_rel).
+    ``cols``/``h0`` override the packed operands (the features/cols_table
+    corruption surface); ``inject`` is the kernel accumulator hook."""
+    import jax.numpy as jnp
+
+    from repro.engine.api import Graph, gcn_forward
+    from repro.engine.backends import BlockEllBackend
+
+    cols = pb.bell.block_cols if cols is None else cols
+    h0 = pb.h0 if h0 is None else h0
+    bk = BlockEllBackend.from_staged(
+        jnp.asarray(cols), jnp.asarray(pb.bell.values),
+        jnp.asarray(pb.stripe_graph), pb.n_slots, cfg,
+        block_g=block_g, interpret=interpret, inject=inject)
+    logits, checks = gcn_forward(params, Graph(s=None, h0=jnp.asarray(h0)),
+                                 cfg, backend=bk)
+    gflags, grel = per_graph_report(checks, cfg, pb.n_slots)
+    return (np.asarray(logits), np.asarray(gflags, bool),
+            np.asarray(grel, np.float32))
+
+
+def _dense_forward(params, cfg: ABFTConfig, graphs
+                   ) -> Tuple[List[np.ndarray], np.ndarray, np.ndarray]:
+    """Per-graph eager dense forwards over prebuilt Graph objects (the
+    ``s_c`` site's path — the corruption lives on the Graph itself)."""
+    from repro.engine.api import gcn_forward
+
+    outs, flags, rels = [], [], []
+    for g in graphs:
+        logits, checks = gcn_forward(params, g, cfg, backend="dense")
+        rep = summarize(checks, cfg)
+        outs.append(np.asarray(logits))        # abftlint: sync-ok (eager campaign harness)
+        flags.append(bool(np.asarray(rep.flag)))    # abftlint: sync-ok
+        rels.append(float(np.asarray(rep.max_rel)))  # abftlint: sync-ok
+    return outs, np.array(flags), np.array(rels, np.float32)
+
+
+def _make_dense_graphs(items, cfg: ABFTConfig):
+    """Graphs with an explicit (honest) staged s_c — the injector needs a
+    stash to corrupt, and an explicit stash is trusted verbatim by the
+    engine, which is exactly why the self-check must re-derive it."""
+    import jax.numpy as jnp
+
+    from repro.core.abft import sparse_col_checksum
+    from repro.engine.api import Graph
+
+    graphs = []
+    for s, h0 in items:
+        sj = jnp.asarray(s)
+        graphs.append(Graph(s=sj, h0=jnp.asarray(h0),
+                            s_c=sparse_col_checksum(sj, cfg.dtype)))
+    return graphs
+
+
+# ---------------------------------------------------------------------------
+# one experiment
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ExperimentResult:
+    """Per-fault-model outcome record (JSON-ready via ``to_dict``)."""
+
+    model: FaultModel
+    steps: int
+    fired_steps: List[int]
+    flagged_steps: List[int]
+    naive_flagged_steps: List[int]      # the would-be d > tau verdicts
+    detected: bool
+    detection_latency: Optional[int]
+    sdc_steps: List[int]
+    masked_steps: List[int]
+    false_positive_steps: List[int]
+    selfcheck_detected: bool
+    selfcheck_step: Optional[int]
+    would_be_false_negative: bool
+    escalated: bool                     # guard refused to verify (evict)
+    repair_tiers: Dict[str, Any]
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["model"] = self.model.to_dict()
+        d["label"] = self.model.label()
+        return d
+
+
+def _adjudicate(guard: ABFTGuard, out, gflags, grel, pb, rerun) -> bool:
+    """Run one flagged step through the guard's repair ladder.  ``rerun``
+    re-executes the batch (with corrupted operands for sticky kinds,
+    clean for transient) and the retry patches only the flagged graphs'
+    rows — the campaign's repair-tier distribution comes from these
+    adjudications.  Returns True when the guard escalated (raised):
+    eviction/degrade advice for the serving layer."""
+    def retry(out, idx):
+        logits2, gflags2, grel2 = rerun()
+        out = np.asarray(out).copy()
+        for gi in idx:
+            o, n = pb.row_offsets[gi], pb.n_nodes[gi]
+            out[o:o + n] = logits2[o:o + n]   # abftlint: sync-ok (eager retry patch)
+        return out, {"abft_graph_flags": gflags2[idx],
+                     "abft_graph_max_rel": grel2[idx]}
+
+    metrics = {"abft_flag": bool(gflags.any()),
+               "abft_max_rel": float(np.nanmax(grel, initial=0.0)),
+               "abft_graph_flags": gflags, "abft_graph_max_rel": grel}
+    try:
+        guard.adjudicate(out, metrics, retry)
+        return False
+    except RuntimeError:
+        return True
+
+
+def _adjudicate_dense(guard: ABFTGuard, outs, flags, rels, rerun) -> bool:
+    """Dense-path analog of :func:`_adjudicate` (per-graph verdicts)."""
+    def retry(out, idx):
+        outs2, flags2, rels2 = rerun()
+        return out, {"abft_graph_flags": flags2[idx],
+                     "abft_graph_max_rel": rels2[idx]}
+
+    metrics = {"abft_flag": bool(flags.any()),
+               "abft_max_rel": float(np.nanmax(rels, initial=0.0)),
+               "abft_graph_flags": flags, "abft_graph_max_rel": rels}
+    try:
+        guard.adjudicate(outs, metrics, retry)
+        return False
+    except RuntimeError:
+        return True
+
+
+def run_experiment(model: FaultModel, *, params, cfg: ABFTConfig, pb,
+                   items, ref_packed, ref_dense, block_g: int,
+                   interpret: bool, n_steps: int,
+                   guard_cfg: Optional[GuardConfig] = None
+                   ) -> ExperimentResult:
+    """Run one fault model for ``n_steps`` serving steps and classify."""
+    inj = FaultInjector(model)
+    guard = ABFTGuard(guard_cfg if guard_cfg is not None
+                      else GuardConfig(max_retries=1, max_restores=1,
+                                       persistent_window=4,
+                                       persistent_threshold=2))
+    dense_site = model.site == "s_c"
+    fired_steps: List[int] = []
+    flagged_steps: List[int] = []
+    naive_steps: List[int] = []
+    sdc_steps: List[int] = []
+    masked_steps: List[int] = []
+    fp_steps: List[int] = []
+    selfcheck_step: Optional[int] = None
+    escalations = 0
+
+    ref_logits = ref_dense[0] if dense_site else ref_packed[0]
+
+    for t in range(n_steps):
+        fired = inj.fires(t)
+        if fired:
+            fired_steps.append(t)
+        if dense_site:
+            graphs = _make_dense_graphs(items, cfg)
+            if fired:
+                # the fault hits one graph's staged checksum; graph 0 is
+                # the deterministic target
+                inj.apply_graph(graphs[0])
+            outs, gflags, grel = _dense_forward(params, cfg, graphs)
+            diverged = any(
+                not np.array_equal(a, b) for a, b in zip(outs, ref_logits))
+            if fired and selfcheck_step is None \
+                    and verify_s_c(graphs[0], cfg):
+                selfcheck_step = t
+            rerun = (lambda: _dense_forward(params, cfg, graphs)) \
+                if model.sticky else \
+                (lambda: _dense_forward(params, cfg,
+                                        _make_dense_graphs(items, cfg)))
+            out_for_guard = outs
+        else:
+            p_t, cols_t, h0_t, inject_t = params, None, None, None
+            if fired:
+                p_t = inj.apply_params(params)
+                cols_t, _vals, h0_t = inj.apply_batch(
+                    pb.bell.block_cols, pb.bell.values, pb.h0)
+                if model.site != "features":
+                    h0_t = None
+                if model.site != "cols_table":
+                    cols_t = None
+                inject_t = inj.kernel_inject()
+            outs, gflags, grel = _packed_forward(
+                p_t, cfg, pb, block_g=block_g, interpret=interpret,
+                inject=inject_t, cols=cols_t, h0=h0_t)
+            diverged = not np.array_equal(outs, ref_logits)
+            if fired and selfcheck_step is None and verify_w_r(p_t, cfg):
+                selfcheck_step = t
+            args = dict(block_g=block_g, interpret=interpret)
+            if model.sticky:
+                rerun = (lambda: _packed_forward(
+                    p_t, cfg, pb, inject=inject_t, cols=cols_t, h0=h0_t,
+                    **args))
+            else:
+                rerun = (lambda: _packed_forward(params, cfg, pb, **args))
+            out_for_guard = outs
+
+        flagged = bool(gflags.any())     # abftlint: sync-ok (eager campaign harness)
+        with np.errstate(invalid="ignore"):
+            # the naive d > tau comparison, recomputed host-side: NaN
+            # compares False, which is precisely the would-be silent
+            # false negative the NaN-safe check closes
+            naive = bool(  # abftlint: sync-ok (host numpy)
+                (grel > cfg.threshold).any())
+        if flagged:
+            flagged_steps.append(t)
+        if naive:
+            naive_steps.append(t)
+        data_corrupt = fired and model.site not in CHECK_PATH_SITES
+        if data_corrupt and not flagged:
+            (sdc_steps if diverged else masked_steps).append(t)
+        if not data_corrupt and flagged:
+            fp_steps.append(t)
+        if flagged:
+            # adjudicate EVERY flagged step (a real serving layer degrades
+            # after the first escalation; the campaign keeps going so a
+            # sticky site recurs and the guard's persistent classification
+            # is exercised and reported)
+            adj = _adjudicate_dense if dense_site else _adjudicate
+            adj_args = (guard, out_for_guard, gflags, grel) \
+                + ((rerun,) if dense_site else (pb, rerun))
+            escalations += adj(*adj_args)
+
+    detected_steps = [t for t in flagged_steps if t in fired_steps] \
+        if model.site not in CHECK_PATH_SITES else flagged_steps
+    detected = bool(detected_steps)
+    latency = (detected_steps[0] - fired_steps[0]
+               if detected and fired_steps else None)
+    selfcheck_detected = selfcheck_step is not None
+    would_be_fn = (model.check_path and bool(fired_steps)
+                   and not naive_steps
+                   and (detected or selfcheck_detected))
+    return ExperimentResult(
+        model=model, steps=n_steps, fired_steps=fired_steps,
+        flagged_steps=flagged_steps, naive_flagged_steps=naive_steps,
+        detected=detected, detection_latency=latency,
+        sdc_steps=sdc_steps, masked_steps=masked_steps,
+        false_positive_steps=fp_steps,
+        selfcheck_detected=selfcheck_detected,
+        selfcheck_step=selfcheck_step,
+        would_be_false_negative=would_be_fn,
+        escalated=escalations > 0,
+        repair_tiers=guard.repair_tiers())
+
+
+# ---------------------------------------------------------------------------
+# the campaign
+# ---------------------------------------------------------------------------
+
+def _aggregate(experiments: List[ExperimentResult]) -> Dict[str, dict]:
+    """Per-(site, kind) rates over the experiment grid."""
+    groups: Dict[str, List[ExperimentResult]] = {}
+    for e in experiments:
+        groups.setdefault(f"{e.model.site}/{e.model.kind}", []).append(e)
+    out = {}
+    for key, es in sorted(groups.items()):
+        n = len(es)
+        lat = [e.detection_latency for e in es
+               if e.detection_latency is not None]
+        clean_steps = sum(
+            e.steps - len(set(e.fired_steps)
+                          if e.model.site not in CHECK_PATH_SITES
+                          else set()) for e in es)
+        fp_steps = sum(len(e.false_positive_steps) for e in es)
+        out[key] = {
+            "n": n,
+            "detection_rate": sum(e.detected for e in es) / n,
+            "sdc_rate":
+                sum(bool(e.sdc_steps)  # abftlint: sync-ok (host lists)
+                    for e in es) / n,
+            "masked_rate":
+                sum(bool(e.masked_steps)  # abftlint: sync-ok
+                    for e in es) / n,
+            "false_positive_step_rate":
+                fp_steps / clean_steps if clean_steps else 0.0,
+            "mean_detection_latency":
+                (sum(lat) / len(lat)) if lat else None,
+            "selfcheck_detection_rate":
+                sum(e.selfcheck_detected for e in es) / n,
+            "would_be_false_negatives":
+                sum(e.would_be_false_negative for e in es),
+            "escalations": sum(e.escalated for e in es),
+        }
+    return out
+
+
+def run_fault_campaign(models: Optional[List[FaultModel]] = None, *,
+                       n_graphs: int = 4, n_steps: int = 4,
+                       n_lo: int = 12, n_hi: int = 32, feat: int = 8,
+                       hidden: int = 16, n_out: int = 4, block: int = 8,
+                       block_g: int = 128, threshold: float = 1e-3,
+                       seed: int = 0, interpret: Optional[bool] = None,
+                       guard_cfg: Optional[GuardConfig] = None,
+                       verbose: bool = False) -> dict:
+    """Sweep ``models`` (default: :func:`sweep_models` grid) over a
+    deterministic synthetic workload; returns the JSON-ready payload."""
+    import jax
+
+    from repro.engine.api import fold_w_r
+    from repro.engine.batching import pack_graphs, synth_graph_stream
+    from repro.kernels.runtime import resolve_interpret
+
+    interp = resolve_interpret(interpret)
+    if models is None:
+        models = sweep_models(step=1, seed=seed)
+    rng = np.random.default_rng(seed)
+    params = {"layers": [
+        {"w": (rng.normal(size=(feat, hidden)) * 0.3).astype(np.float32),
+         "b": np.zeros(hidden, np.float32)},
+        {"w": (rng.normal(size=(hidden, n_out)) * 0.3).astype(np.float32),
+         "b": np.zeros(n_out, np.float32)}]}
+    cfg = ABFTConfig(threshold=threshold)
+    params = fold_w_r(params, cfg)
+    items = synth_graph_stream(n_graphs, n_lo=n_lo, n_hi=n_hi, feat=feat,
+                               seed=seed)
+    # one fixed batch for the whole campaign: a single packed shape,
+    # no shape menu to quantize
+    pb = pack_graphs(items, block=block,  # abftlint: pack-ok
+                     n_slots=n_graphs)
+
+    # clean reference + clean control: the workload is deterministic and
+    # eager, so one evaluation IS every clean step — any flag here is a
+    # false positive on clean data and fails the campaign gate
+    ref_packed = _packed_forward(params, cfg, pb, block_g=block_g,
+                                 interpret=interp)
+    need_dense = any(m.site == "s_c" for m in models)
+    ref_dense = (_dense_forward(params, cfg, _make_dense_graphs(items, cfg))
+                 if need_dense else None)
+    clean_flags = int(ref_packed[1].sum()) + (
+        int(ref_dense[1].sum()) if ref_dense is not None else 0)
+
+    experiments = []
+    for m in models:
+        if verbose:
+            print(f"fault_campaign: {m.label()} (seed={m.seed})")
+        experiments.append(run_experiment(
+            m, params=params, cfg=cfg, pb=pb, items=items,
+            ref_packed=ref_packed, ref_dense=ref_dense, block_g=block_g,
+            interpret=interp, n_steps=n_steps, guard_cfg=guard_cfg))
+
+    tiers_total: Dict[str, Any] = {"slot": 0, "stripe": 0, "graph": 0,
+                                   "restore": 0,
+                                   "persistent_escalations": 0}
+    persistent_sites: List[str] = []
+    for e in experiments:
+        for k in ("slot", "stripe", "graph", "restore",
+                  "persistent_escalations"):
+            tiers_total[k] += e.repair_tiers[k]
+        persistent_sites.extend(e.repair_tiers["persistent_sites"])
+
+    return {
+        "benchmark": "fault_campaign",
+        "backend": jax.default_backend(),
+        "interpret": bool(interp),
+        "authoritative": not bool(interp),
+        "config": {"n_graphs": n_graphs, "n_steps": n_steps,
+                   "n_lo": n_lo, "n_hi": n_hi, "feat": feat,
+                   "hidden": hidden, "n_out": n_out, "block": block,
+                   "threshold": threshold, "seed": seed,
+                   "n_models": len(models)},
+        "clean_control": {
+            "flagged": clean_flags,
+            "false_positive_rate":
+                clean_flags / (pb.n_slots + (len(items) if need_dense
+                                             else 0)),
+        },
+        "experiments": [e.to_dict() for e in experiments],
+        "by_site_kind": _aggregate(experiments),
+        "repair_tiers_total": {**tiers_total,
+                               "persistent_sites":
+                                   sorted(set(persistent_sites))},
+    }

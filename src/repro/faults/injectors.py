@@ -1,0 +1,198 @@
+"""Fault injectors: bitcast bit-flips + stateful sticky re-application.
+
+The injector is the stateful half of a :class:`~repro.faults.model.
+FaultModel`: it decides when the fault fires, draws the target
+coordinates once (seeded), and — for sticky kinds — RE-APPLIES the same
+corruption every step, which is what distinguishes a stuck-at cell from
+a transient upset: a retry that rereads the operand gets the corruption
+back.
+
+All corruption happens host-side on the operand copies handed to the
+jitted step (modelling memory corruption of weights / features / index
+tables); the one device-side site, the kernel accumulator, reuses the
+existing ``inject=(layer, stripe, slot, delta)`` hook that all three
+spmm/fused/network kernels honour.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .model import FaultModel
+
+_UINT_FOR = {4: np.uint32, 8: np.uint64}
+
+
+def flip_bits(arr: np.ndarray, flat_index: int, bit: int) -> np.ndarray:
+    """Return a copy of ``arr`` with ``bit`` XOR-flipped in the element at
+    ``flat_index`` — the bitcast upset model (works for f32/f64 via the
+    matching uint view, and for integer dtypes directly)."""
+    arr = np.array(arr)          # contiguous writable copy
+    flat = arr.reshape(-1)
+    if arr.dtype.kind == "f":
+        u = _UINT_FOR.get(arr.dtype.itemsize)
+        if u is None:
+            raise ValueError(f"no uint view for dtype {arr.dtype}")
+        bits = flat.view(u)
+        bits[flat_index] ^= u(1 << (bit % (8 * arr.dtype.itemsize)))
+    elif arr.dtype.kind in "iu":
+        width = 8 * arr.dtype.itemsize
+        flat[flat_index] = flat[flat_index] ^ arr.dtype.type(
+            1 << (bit % width))
+    else:
+        raise ValueError(f"cannot bit-flip dtype {arr.dtype}")
+    return arr
+
+
+class FaultInjector:
+    """Stateful fault process for one :class:`FaultModel` over a run.
+
+    Usage per step ``t``::
+
+        if inj.fires(t):
+            params = inj.apply_params(params)        # weights / w_r
+            cols, vals, h0 = inj.apply_batch(cols, vals, h0)
+            inject = inj.kernel_inject()             # accumulator
+
+    ``fires`` latches sticky kinds; the ``apply_*`` hooks then corrupt
+    the SAME coordinates to the SAME values on every subsequent step —
+    re-applying (not accumulating) the corruption, so a clean rewrite of
+    the cell between steps is undone exactly once.
+    """
+
+    def __init__(self, model: FaultModel):
+        self.model = model
+        self.rng = np.random.default_rng(model.seed)
+        self.latched = False
+        self.first_fired_step: Optional[int] = None
+        self._bern: Dict[int, bool] = {}
+        # per-target-array sticky state: key -> [(flat_index, value)]
+        self._stuck: Dict[str, List[Tuple[int, np.generic]]] = {}
+
+    # -- timing -----------------------------------------------------------
+
+    def fires(self, step_idx: int) -> bool:
+        m = self.model
+        if m.sticky and self.latched:
+            return True
+        if m.timing == "targeted":
+            fired = (step_idx >= m.step) if m.sticky \
+                else (step_idx == m.step)
+        else:
+            if step_idx not in self._bern:
+                self._bern[step_idx] = bool(self.rng.random() < m.p)
+            fired = self._bern[step_idx]
+        if fired:
+            self.latched = self.latched or m.sticky
+            if self.first_fired_step is None:
+                self.first_fired_step = step_idx
+        return fired
+
+    # -- corruption core --------------------------------------------------
+
+    def _coords(self, key: str, size: int) -> List[int]:
+        n = self.model.n_upsets
+        if self.model.index is not None:
+            base = self.model.index % size
+            return [(base + k) % size for k in range(n)]
+        state = self._stuck.get(key)
+        if state is not None:
+            return [i for i, _ in state]
+        return list(self.rng.choice(size, size=min(n, size),
+                                    replace=False))
+
+    def corrupt_array(self, key: str, arr: np.ndarray) -> np.ndarray:
+        """Corrupt (a copy of) one target array, latching sticky values."""
+        m = self.model
+        arr = np.array(arr)
+        state = self._stuck.get(key)
+        if state is not None:
+            # sticky re-application: same cells, same stuck values
+            flat = arr.reshape(-1)
+            for i, v in state:
+                flat[i] = v
+            return arr
+        coords = self._coords(key, arr.size)
+        for i in coords:
+            if m.kind == "stuck" and m.stuck_value is not None:
+                flat = arr.reshape(-1)
+                flat[i] = arr.dtype.type(m.stuck_value)
+            else:
+                arr = flip_bits(arr, i, m.bit)
+        if m.sticky:
+            flat = arr.reshape(-1)
+            # scalar indexing copies, so the latched value is immutable
+            self._stuck[key] = [(i, flat[i]) for i in coords]
+        return arr
+
+    # -- site hooks -------------------------------------------------------
+
+    def apply_params(self, params):
+        """weights / w_r sites: corrupt one layer's W or its folded
+        checksum column source, returning a shallow-copied params tree."""
+        m = self.model
+        if m.site not in ("weights", "w_r"):
+            return params
+        field = "w" if m.site == "weights" else "w_r"
+        layers = list(params["layers"])
+        layer = dict(layers[m.layer % len(layers)])
+        if field not in layer:
+            raise ValueError(f"fault site {m.site!r} needs params with a "
+                             f"folded {field!r} entry (run fold_w_r first)")
+        layer[field] = self.corrupt_array(
+            field, np.asarray(layer[field]))
+        layers[m.layer % len(layers)] = layer
+        return {**params, "layers": layers}
+
+    def apply_batch(self, cols: np.ndarray, vals: np.ndarray,
+                    h0: np.ndarray):
+        """features / cols_table sites: corrupt the packed operands."""
+        m = self.model
+        if m.site == "features":
+            h0 = self.corrupt_array("h0", np.asarray(h0))
+        elif m.site == "cols_table":
+            cols = np.array(cols)
+            n_cols = int(cols.max()) + 1 if cols.size else 1
+            flat = cols.reshape(-1)
+            state = self._stuck.get("cols")
+            if state is not None:
+                for i, v in state:
+                    flat[i] = v
+            else:
+                coords = self._coords("cols", flat.size)
+                for i in coords:
+                    if m.kind == "stuck" and m.stuck_value is not None:
+                        v = int(m.stuck_value)  # abftlint: sync-ok
+                        flat[i] = v % n_cols
+                    else:
+                        # a corrupted index must still land on a valid
+                        # column block (a wild pointer traps instead of
+                        # silently corrupting — the interesting case is
+                        # the silent one)
+                        v = int(flat[i])  # abftlint: sync-ok (host)
+                        flat[i] = (v ^ (1 << (m.bit % 8))) % n_cols
+                if m.sticky:
+                    self._stuck["cols"] = [(i, flat[i]) for i in coords]
+        return cols, vals, h0
+
+    def apply_graph(self, graph):
+        """s_c site: corrupt the dense/BCOO path's offline adjacency
+        column checksum stashed on the Graph (trusted verbatim by the
+        engine — exactly why the self-check must re-derive it)."""
+        if self.model.site != "s_c":
+            return graph
+        if graph.s_c is None:
+            raise ValueError("fault site 's_c' needs a Graph with a "
+                             "staged s_c (run one forward first or pass "
+                             "it explicitly)")
+        graph.s_c = self.corrupt_array("s_c", np.asarray(graph.s_c))
+        graph._s_c_auto = False      # user-provided values are trusted
+        return graph
+
+    def kernel_inject(self) -> Optional[Tuple[int, int, int, float]]:
+        """accumulator site: the kernel ``inject=`` tuple, or None."""
+        m = self.model
+        if m.site != "accumulator":
+            return None
+        return (m.layer, m.stripe, m.slot, m.delta)

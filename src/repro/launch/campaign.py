@@ -1,0 +1,126 @@
+"""Fault-injection campaign driver: sweep fault models x sites and
+report what the online ABFT checks catch, miss, and falsely flag.
+
+    PYTHONPATH=src python -m repro.launch.campaign --steps 4 \
+        --json BENCH_fault_campaign.json
+
+``--smoke`` shrinks the sweep to one representative model per
+(site, kind) cell for CI; ``--assert-gates`` exits non-zero unless
+(a) every above-threshold accumulator upset was detected (the paper's
+headline single-upset coverage claim) and (b) the clean control run
+produced zero false positives.  Detection of data-path faults, measured
+SDC rates for the architecturally-silent consistent-corruption sites
+(features / cols_table), false-positive storms from finite check-path
+corruption, and the would-be NaN false negatives closed by the NaN-safe
+comparison + periodic self-check all land in the JSON payload, stamped
+``interpret``/``authoritative`` like every other benchmark here.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Optional, Sequence
+
+from repro.faults.campaign import run_fault_campaign
+from repro.faults.model import sweep_models
+
+
+def main(argv: Optional[Sequence[str]] = None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graphs", type=int, default=4,
+                    help="graphs per packed serving batch")
+    ap.add_argument("--steps", type=int, default=4,
+                    help="serving steps per experiment")
+    ap.add_argument("--reps", type=int, default=2,
+                    help="seeded repetitions per (site, kind) cell")
+    ap.add_argument("--nodes", default="12,32",
+                    help="lo,hi node-count range of the synthetic graphs")
+    ap.add_argument("--feat", type=int, default=8)
+    ap.add_argument("--hidden", type=int, default=16)
+    ap.add_argument("--classes", type=int, default=4)
+    ap.add_argument("--block", type=int, default=8,
+                    help="square block size of the packed block-ELL layout")
+    ap.add_argument("--threshold", type=float, default=1e-3)
+    ap.add_argument("--bit", type=int, default=30,
+                    help="flipped bit position for bitflip kinds")
+    ap.add_argument("--fault-step", type=int, default=1,
+                    help="targeted-timing injection step")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="one model per (site, kind) cell — the CI lane")
+    ap.add_argument("--json", default="BENCH_fault_campaign.json",
+                    help="write the machine-readable payload here "
+                         "('' disables)")
+    ap.add_argument("--assert-gates", action="store_true",
+                    help="exit non-zero unless accumulator detection is "
+                         "100%% and the clean control has zero flags")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    n_lo, n_hi = (int(v) for v in args.nodes.split(","))
+    models = sweep_models(reps=1 if args.smoke else args.reps,
+                          step=args.fault_step, bit=args.bit,
+                          seed=args.seed)
+    print(f"=== fault_campaign: {len(models)} fault models x "
+          f"{args.steps} steps ({args.graphs} graphs/batch) ===")
+
+    payload = run_fault_campaign(
+        models, n_graphs=args.graphs, n_steps=args.steps,
+        n_lo=n_lo, n_hi=n_hi, feat=args.feat, hidden=args.hidden,
+        n_out=args.classes, block=args.block, threshold=args.threshold,
+        seed=args.seed, verbose=args.verbose)
+
+    for key, agg in payload["by_site_kind"].items():
+        lat = agg["mean_detection_latency"]
+        print(f"  {key:24s} det={agg['detection_rate']:.2f} "
+              f"sdc={agg['sdc_rate']:.2f} "
+              f"fp/step={agg['false_positive_step_rate']:.2f} "
+              f"selfcheck={agg['selfcheck_detection_rate']:.2f} "
+              + (f"latency={lat:.1f} " if lat is not None else "")
+              + (f"would-be-FN={agg['would_be_false_negatives']} "
+                 if agg["would_be_false_negatives"] else "")
+              + (f"escalations={agg['escalations']}"
+                 if agg["escalations"] else ""))
+    tiers = payload["repair_tiers_total"]
+    print(f"repair tiers: slot={tiers['slot']} stripe={tiers['stripe']} "
+          f"graph={tiers['graph']} restore={tiers['restore']} "
+          f"persistent_escalations={tiers['persistent_escalations']} "
+          f"persistent_sites={len(tiers['persistent_sites'])}")
+    print(f"clean control: {payload['clean_control']['flagged']} flags "
+          f"(false-positive rate "
+          f"{payload['clean_control']['false_positive_rate']:.3f})")
+    if payload["interpret"]:
+        print("WARNING: interpret-mode kernels (no real accelerator) — "
+              "detection results are functional, timings would NOT be "
+              "authoritative")
+
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"wrote {args.json}")
+
+    if args.assert_gates:
+        failures = []
+        for key, agg in payload["by_site_kind"].items():
+            if key.startswith("accumulator/") \
+                    and agg["detection_rate"] < 1.0:
+                failures.append(
+                    f"{key}: detection {agg['detection_rate']:.2f} < 1.0 "
+                    "for above-threshold accumulator upsets")
+        if payload["clean_control"]["flagged"]:
+            failures.append(
+                f"clean control flagged "
+                f"{payload['clean_control']['flagged']} graphs "
+                "(expected zero false positives)")
+        if failures:
+            for f in failures:
+                print(f"FAIL: {f}", file=sys.stderr)
+            sys.exit(1)
+        print("gates: accumulator detection 100%, clean control clean")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -182,6 +182,12 @@ def serve(batches: Sequence[Batch], params, cfg: ABFTConfig,
               f"recomputed_rows={guard.recomputed_rows} "
               f"flag_rate={guard.flag_rate:.4f} "
               f"evict={guard.should_evict()}")
+        tiers = guard.repair_tiers()
+        print(f"repair tiers: slot={tiers['slot']} "
+              f"stripe={tiers['stripe']} graph={tiers['graph']} "
+              f"restore={tiers['restore']} "
+              f"persistent={tiers['persistent_escalations']} "
+              f"suspect={tiers['suspect']}")
         if fusion["network_hits"] or fusion["network_fallbacks"] \
                 or fusion["fused_hits"] or fusion["fused_fallbacks"]:
             print(f"fusion: network_hits={fusion['network_hits']} "
@@ -194,6 +200,7 @@ def serve(batches: Sequence[Batch], params, cfg: ABFTConfig,
             "stripe_retries": guard.stripe_retries,
             "slot_retries": guard.slot_retries,
             "recomputed_rows": guard.recomputed_rows,
+            "repair_tiers": guard.repair_tiers(),
             "graph_flags": graph_flags, "graph_max_rel": graph_max_rel,
             **fusion}
 

@@ -138,6 +138,16 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
           f"(+{stats['singleton_dispatches']} singleton dispatches); "
           f"guard flags={stats['guard_flags']} "
           f"retries={stats['guard_retries']}")
+    tiers = stats["repair_tiers"]
+    if tiers:
+        print(f"repair tiers: slot={tiers['slot']} "
+              f"stripe={tiers['stripe']} graph={tiers['graph']} "
+              f"restore={tiers['restore']} "
+              f"persistent={tiers['persistent_escalations']}; "
+              f"backend={stats['active_backend']} "
+              f"(degrades={stats['degrades']} "
+              f"failovers={stats['failovers']} "
+              f"hang_flushes={stats['hang_flushes']})")
     if args.fused_layer or args.fused_network:
         print(f"fusion: network_hits={stats['network_hits']} "
               f"network_fallbacks={stats['network_fallbacks']} "

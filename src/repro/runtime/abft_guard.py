@@ -16,6 +16,20 @@ Policy (per train/serve step):
   4. track flag-rate statistics: a chip flagging above `evict_rate` is
      reported via `should_evict` for the cluster layer to act on.
 
+Sticky-fault discrimination (PR 9): a transient SDC does not recur at one
+coordinate, a stuck-at cell does — so the guard remembers the finest
+flagged (layer, stripe, slot) sites of its recent flagged steps, and a
+site recurring ``persistent_threshold`` times within a
+``persistent_window`` of flagged steps is classified *persistent*.  From
+then on that site's flags skip the doomed surgical/graph retry tiers
+(every re-execution on the same unit re-reads the same stuck state) and
+escalate straight to restore->replay with exponential backoff
+(``restore_backoff``/``max_backoff``); the guard marks itself ``suspect``
+so the serving layer (``engine.streaming.StreamingEngine``) can drain,
+checkpoint, and swap to a degraded backend.  ``repair_tiers()`` surfaces
+the slot/stripe/graph/restore repair distribution plus the
+persistent-site and backoff state for serve stats and BENCH payloads.
+
 Batched multi-graph serving uses :meth:`ABFTGuard.run_step_graphs` instead:
 the step emits a *per-graph* verdict vector (the packed block-ELL segmented
 epilogue or the dense batched checks), and only the flagged graphs are
@@ -49,6 +63,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import logging
+import time
 from typing import Any, Callable, Optional, Tuple
 
 import numpy as np
@@ -63,15 +78,33 @@ class GuardConfig:
     evict_rate: float = 1e-3     # flags per step above which chip is suspect
     window: int = 1000           # rolling window (steps) for should_evict
     min_samples: int = 100       # steps seen before eviction is judged
+    # sticky-fault discrimination: the same (layer, stripe, slot) site
+    # flagging >= persistent_threshold times within the last
+    # persistent_window FLAGGED steps is classified *persistent* — a
+    # transient SDC does not recur at one coordinate; a stuck-at cell
+    # does.  Persistent faults skip the doomed retry tiers (re-executing
+    # on the same unit re-reads the same stuck value) and escalate
+    # straight to restore->replay.
+    persistent_window: int = 8
+    persistent_threshold: int = 3
+    # exponential backoff between restore escalations: the r-th restore
+    # round sleeps restore_backoff * 2^level (capped at max_backoff)
+    # before replaying, so a host thrashing on a persistent fault does
+    # not hammer the restore path.  0 disables (the default: tests and
+    # single-step callers should not sleep).
+    restore_backoff: float = 0.0
+    max_backoff: float = 30.0
 
 
 class ABFTGuard:
     def __init__(self, cfg: Optional[GuardConfig] = None,
-                 restore_fn: Optional[Callable[[], Any]] = None):
+                 restore_fn: Optional[Callable[[], Any]] = None,
+                 sleep_fn: Callable[[float], None] = time.sleep):
         # cfg is constructed per guard — a dataclass default instance would
         # be one shared mutable object across every guard in the process.
         self.cfg = cfg if cfg is not None else GuardConfig()
         self.restore_fn = restore_fn
+        self._sleep = sleep_fn   # injectable: tests assert backoff delays
         self.steps = 0
         self.flags = 0           # lifetime count of flagged steps
         self.retries = 0         # re-executions PERFORMED (any tier)
@@ -85,6 +118,66 @@ class ABFTGuard:
         # by its clean history.
         self._recent: collections.deque = collections.deque(
             maxlen=max(self.cfg.window, 1))
+        # sticky-fault discrimination state: the finest flagged coordinates
+        # of the last persistent_window FLAGGED adjudications, and the set
+        # of sites classified persistent from their recurrence
+        self._site_history: collections.deque = collections.deque(
+            maxlen=max(self.cfg.persistent_window, 1))
+        self.persistent_sites: set = set()
+        self.persistent_escalations = 0   # tier-skips on persistent sites
+        self.suspect = False              # backend marked suspect
+        self._backoff_level = 0           # consecutive restore escalations
+
+    # -- sticky-fault discrimination --------------------------------------
+
+    @staticmethod
+    def _flag_sites(metrics, flags: np.ndarray) -> frozenset:
+        """The finest available coordinates of this step's flags, as
+        stable string keys: (layer, stripe, slot) when the step carries
+        slot corners, (layer, stripe) at stripe granularity, the graph
+        slot otherwise.  Capped at 64 sites — a step that floods more
+        coordinates than that is a step-wide event, not a stuck cell."""
+        for key, fmt in (("abft_slot_flags",
+                          lambda c: "slot:L{}:S{}:E{}".format(*c)),
+                         ("abft_stripe_flags",
+                          lambda c: "stripe:L{}:S{}".format(*c))):
+            a = np.asarray(metrics.get(key, False), dtype=bool)
+            if a.ndim and a.any():
+                return frozenset(fmt(tuple(int(v) for v in c))
+                                 for c in np.argwhere(a)[:64])
+        return frozenset(f"graph:{int(g)}"
+                         for g in np.nonzero(flags)[0][:64])
+
+    def _note_sites(self, sites: frozenset) -> frozenset:
+        """Record one flagged step's sites; classify any site recurring
+        ``persistent_threshold`` times within the window as persistent.
+        Returns this step's sites that are (now) classified persistent."""
+        self._site_history.append(sites)
+        for s in sites:
+            if s in self.persistent_sites:
+                continue
+            if sum(s in past for past in self._site_history) \
+                    >= self.cfg.persistent_threshold:
+                self.persistent_sites.add(s)
+                self.suspect = True
+                log.error(
+                    "ABFT: site %s flagged %d times within the last %d "
+                    "flagged steps — classified PERSISTENT (stuck-at); "
+                    "backend marked suspect", s,
+                    self.cfg.persistent_threshold,
+                    len(self._site_history))
+        return sites & self.persistent_sites
+
+    def reset_backend_state(self) -> None:
+        """Called by the serving layer after it acts on eviction advice
+        (drain + checkpoint + swap to a degraded backend): the rolling
+        window, site classifications, suspect mark, and backoff level all
+        describe the REPLACED execution path.  Lifetime counters stand."""
+        self._recent.clear()
+        self._site_history.clear()
+        self.persistent_sites.clear()
+        self.suspect = False
+        self._backoff_level = 0
 
     def run_step(self, step_fn: Callable[..., Tuple[Any, Any]], *args):
         """step_fn returns (new_state, metrics) where metrics['abft_flag'] is
@@ -105,6 +198,8 @@ class ABFTGuard:
             if not flagged:
                 if attempt:
                     log.warning("ABFT: retry %d succeeded", attempt)
+                else:
+                    self._backoff_level = 0   # clean first try
                 self._recent.append(step_flagged)
                 return out, metrics
             if not step_flagged:
@@ -237,8 +332,32 @@ class ABFTGuard:
         flags = np.array(metrics["abft_graph_flags"], dtype=bool).copy()
         if not flags.any():
             self._recent.append(False)
+            self._backoff_level = 0
             return out, self._adopt(metrics)
         self.flags += 1
+        # sticky-fault discrimination BEFORE any repair work: a site
+        # already classified persistent makes every surgical/graph retry
+        # doomed (the re-execution re-reads the same stuck state), so the
+        # ladder is skipped and the step escalates straight to the
+        # restore->replay path — with exponential backoff, and the
+        # backend marked suspect for the serving layer's eviction logic.
+        persistent = self._note_sites(self._flag_sites(metrics, flags))
+        if persistent:
+            self.persistent_escalations += 1
+            self._recent.append(True)
+            log.error(
+                "ABFT: step %d flags persistent site(s) %s — skipping "
+                "the doomed retry tiers, escalating to restore",
+                self.steps, sorted(persistent)[:4])
+            if replay is None:
+                raise RuntimeError(
+                    f"ABFT: persistent fault at {sorted(persistent)[:4]} "
+                    f"and no replay=(step_fn, args) to escalate to — "
+                    f"evict or degrade this backend")
+            step_fn, args = replay
+            out, metrics = self._restore_and_replay(step_fn, args,
+                                                    adopt_state=False)
+            return out, self._adopt(metrics)
         grel = None
         if "abft_graph_max_rel" in metrics:
             grel = np.array(metrics["abft_graph_max_rel"],
@@ -377,6 +496,14 @@ class ABFTGuard:
             raise RuntimeError("ABFT: persistent fault and no restore_fn "
                                "given")
         for r in range(1, self.cfg.max_restores + 1):
+            if self.cfg.restore_backoff > 0:
+                delay = min(self.cfg.restore_backoff
+                            * (2 ** self._backoff_level),
+                            self.cfg.max_backoff)
+                log.error("ABFT: restore backoff %.3fs (level %d)",
+                          delay, self._backoff_level)
+                self._sleep(delay)
+            self._backoff_level += 1
             log.error("ABFT: persistent fault; restore %d/%d + replay",
                       r, self.cfg.max_restores)
             self.restores += 1
@@ -413,3 +540,18 @@ class ABFTGuard:
         seen = len(self._recent)
         need = min(self.cfg.min_samples, self.cfg.window)
         return seen >= need and self.flag_rate > self.cfg.evict_rate
+
+    def repair_tiers(self) -> dict:
+        """The repair-tier distribution + persistent-fault/backoff state,
+        JSON-ready — surfaced by serve() stats, StreamingEngine.stats(),
+        and the BENCH payloads."""
+        return {
+            "slot": self.slot_retries,
+            "stripe": self.stripe_retries,
+            "graph": self.graph_retries,
+            "restore": self.restores,
+            "persistent_sites": sorted(self.persistent_sites),
+            "persistent_escalations": self.persistent_escalations,
+            "suspect": self.suspect,
+            "backoff_level": self._backoff_level,
+        }
