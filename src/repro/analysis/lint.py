@@ -16,14 +16,15 @@ shapes matter to a trace, values don't):
   backward pass's dot_generals are expected-unchecked: ABFT covers the
   forward products, which is the paper's scope — so this step reports
   them rather than gating on them);
-* ``lm-prefill`` / ``lm-decode`` — ``examples/serve_lm.py``'s model via
-  ``launch/steps.py``.  These default to ``--mode none`` — the UNGUARDED
-  serving trace — so they report every unchecked matmul with source
-  provenance; that manifest is ROADMAP item 2's TODO list (run with
-  ``--expect-unchecked`` in CI so "still unchecked" passes and "newly
-  covered" shows up as a manifest diff).  With ``--mode fused`` the
-  step functions' existing per-matmul checks (dense ``check_matmul`` +
-  the attention chain check) are traced instead and verify clean.
+* ``lm-prefill`` / ``lm-decode`` — the guarded LM serving steps
+  (``engine/lm.py``'s checked-op factories, what ``launch/serve_lm.py``
+  dispatches): folded-``w_r`` dense checks + the fused attention chain
+  check + per-op verdict vectors.  These default to ``--mode fused``
+  and gate on zero unchecked matmuls — ROADMAP item 2 is done; the old
+  unguarded baseline manifest is still available via ``--mode none``
+  (with ``--expect-unchecked``);
+* ``gat-serve``    — the guarded GAT serve step (``engine/gat.py``):
+  the attention-weighted aggregation's eq. 4–6 chain corner per layer.
 
 Passes (``--passes coverage,vmem,syncs``; default all that apply):
 coverage traces the step under check tagging and verifies every
@@ -43,7 +44,7 @@ from pathlib import Path
 from typing import List, Optional
 
 STEPS = ("gcn-serve", "gcn-stream", "gcn-forward", "gcn-train",
-         "lm-prefill", "lm-decode")
+         "lm-prefill", "lm-decode", "gat-serve")
 PASSES = ("coverage", "vmem", "syncs")
 
 
@@ -195,12 +196,17 @@ def _build_traces(args) -> List[tuple]:
         import numpy as np
 
         from repro.configs import get_config, smoke_config
-        from repro.launch.steps import make_decode_step, make_prefill_step
+        from repro.engine.lm import (
+            fold_lm_w_r,
+            make_guarded_decode_step,
+            make_guarded_prefill_step,
+        )
         from repro.models.transformer import init_model
 
         cfg = smoke_config(get_config(args.arch))
         abft = ABFTConfig(mode=args.mode)
-        params = init_model(cfg, jax.random.PRNGKey(0))
+        params = fold_lm_w_r(init_model(cfg, jax.random.PRNGKey(0)),
+                             cfg, abft)
         rng = np.random.default_rng(0)
         prompt, cache_len = 8, 16
         batch = {"tokens": jnp.asarray(
@@ -208,18 +214,38 @@ def _build_traces(args) -> List[tuple]:
         if cfg.family == "encdec":
             batch["src_embeds"] = jnp.asarray(
                 rng.normal(size=(2, prompt, cfg.d_model)), jnp.float32)
+        # trace the string-free jitted cores (.traceable): the host-side
+        # wrappers attach the static op-id tuple, which is not a JAX type
+        prefill = make_guarded_prefill_step(cfg, abft, cache_len).traceable
+        inj = jnp.float32(0.0)
         if step == "lm-prefill":
-            fn = jax.jit(make_prefill_step(cfg, abft, cache_len))
-            return [(f"lm-prefill/{cfg.name}", _trace(fn, params, batch))], []
-        prefill = jax.jit(make_prefill_step(cfg, abft, cache_len))
-        _logits, states, _m = jax.eval_shape(prefill, params, batch)
+            return [(f"lm-prefill/{cfg.name}",
+                     _trace(prefill, params, batch, inj))], []
+        (_logits, states), _m = jax.eval_shape(prefill, params, batch, inj)
         states = jax.tree.map(
             lambda sd: jnp.zeros(sd.shape, sd.dtype), states)
         tok = jnp.zeros((2, 1), jnp.int32)
         pos = jnp.asarray(prompt, jnp.int32)
-        fn = jax.jit(make_decode_step(cfg, abft))
+        fn = make_guarded_decode_step(cfg, abft).traceable
         return [(f"lm-decode/{cfg.name}",
-                 _trace(fn, params, states, tok, pos))], []
+                 _trace(fn, params, states, tok, pos, inj))], []
+
+    if step == "gat-serve":
+        from repro.engine.gat import (
+            fold_gat_w_r,
+            init_gat,
+            make_gat_serve_step,
+        )
+
+        cfg = ABFTConfig(mode=args.mode)
+        dims = (args.feat, args.hidden, args.hidden, args.classes)
+        params = fold_gat_w_r(init_gat(jax.random.PRNGKey(0), dims), cfg)
+        g = _synth_graphs(1, args.nodes, args.feat)[0]
+        adj, h0 = jnp.asarray(g[0]), jnp.asarray(g[1])
+        fn = make_gat_serve_step(cfg).traceable
+        return [("gat-serve", _trace(fn, params, h0, adj,
+                                     jnp.asarray(-1, jnp.int32),
+                                     jnp.float32(0.0)))], []
 
     raise SystemExit(2)
 
@@ -241,9 +267,10 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="gcn-forward engine backend")
     ap.add_argument("--mode", default=None,
                     choices=["none", "split", "fused"],
-                    help="ABFT mode for the traced step; default fused for "
-                         "gcn-* and none (the unguarded trace — ROADMAP "
-                         "item 2's baseline manifest) for lm-*")
+                    help="ABFT mode for the traced step; default fused "
+                         "everywhere (lm-* now trace the guarded engine "
+                         "steps; --mode none recovers the historical "
+                         "unguarded baseline manifest)")
     ap.add_argument("--arch", default="gemma-2b",
                     help="lm-* architecture (smoke-sized)")
     ap.add_argument("--fused-layer", action="store_true")
@@ -261,12 +288,13 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="write the coverage manifest(s) as JSON")
     ap.add_argument("--expect-unchecked", action="store_true",
                     help="invert the coverage gate: succeed when unchecked "
-                         "matmuls exist (the lm-* CI lanes — their "
-                         "manifest is ROADMAP item 2's TODO list)")
+                         "matmuls exist (the historical lm-* --mode none "
+                         "baseline manifest; the guarded lanes gate on "
+                         "zero unchecked)")
     ap.add_argument("--verbose", "-v", action="store_true")
     args = ap.parse_args(argv)
     if args.mode is None:
-        args.mode = "none" if args.step.startswith("lm-") else "fused"
+        args.mode = "fused"
 
     passes = [p.strip() for p in args.passes.split(",") if p.strip()]
     bad = [p for p in passes if p not in PASSES]

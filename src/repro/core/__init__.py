@@ -11,11 +11,17 @@ Public surface:
 from .abft import (  # noqa: F401
     ABFTConfig,
     ABFTReport,
+    ChainOp,
     Check,
+    CheckedOp,
+    MatmulOp,
     check_chain,
     check_matmul,
     checked_matmul,
+    fold_w_r_tree,
     gcn_layer,
+    per_op_report,
+    resolve_w_r,
     gcn_layer_fused,
     gcn_layer_fused_sparse,
     gcn_layer_sparse,

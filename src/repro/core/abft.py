@@ -11,6 +11,16 @@ Three policies (``ABFTConfig.mode``):
   * ``split`` — the paper's baseline: one check per matmul (eqs. 2–3).
   * ``fused`` — GCN-ABFT: one check per *linear chain* (eq. 4).  Chains are
     broken by nonlinearities; isolated matmuls degrade to split checks.
+
+The engine-facing contract is the :class:`CheckedOp` protocol: a checked op
+takes its operands plus folded check vectors and returns ``(out, Check)`` at
+a declared granularity.  The eq. 4–6 chaining/fold/report algebra that
+backs every implementation — :func:`resolve_w_r`, :func:`fold_w_r_tree`,
+:func:`check_chain`, :func:`per_op_report` — lives here, op-generically:
+none of it mentions GCNs.  ``engine/api.py`` (GCN layers), ``engine/lm.py``
+(transformer prefill/decode), ``engine/gat.py`` (GAT aggregation) and the
+``kernels/matmul_abft`` / ``kernels/flash_checksum`` Pallas ops are all
+implementations of this one protocol.
 """
 from __future__ import annotations
 
@@ -100,6 +110,14 @@ class Check:
         p, a = tag_check(self.predicted, self.actual, self.granularity)
         return jnp.abs(p - a)
 
+    def _scale(self) -> Array:
+        # the relative scale must stay FINITE: an overflowed output
+        # (actual = ±inf, e.g. a high exponent bit flip in a weight)
+        # would make tau*scale infinite and the comparison pass silently
+        # (inf <= inf).  Clamped to 1.0, the infinite divergence flags.
+        scale = jnp.maximum(1.0, jnp.abs(self.actual))
+        return jnp.where(jnp.isfinite(scale), scale, 1.0)
+
     def flag(self, cfg: ABFTConfig) -> Array:
         # NaN-safe: a NaN divergence (corrupted checksum path — a bit
         # flip in w_r/s_c/the carried eq.-5 column propagating to pred)
@@ -107,8 +125,7 @@ class Check:
         # disable ABFT, so the comparison is negated: not (d <= tau).
         d = self.diff()
         if cfg.relative:
-            scale = jnp.maximum(1.0, jnp.abs(self.actual))
-            return jnp.any(~(d <= cfg.threshold * scale))
+            return jnp.any(~(d <= cfg.threshold * self._scale()))
         return jnp.any(~(d <= cfg.threshold))
 
     def elementwise(self, cfg: ABFTConfig) -> tuple[Array, Array]:
@@ -116,7 +133,7 @@ class Check:
         of :func:`per_graph_report` / :func:`per_stripe_report`.  NaN-safe
         like :meth:`flag`: a NaN comparison flags its element."""
         d = self.diff()
-        scale = jnp.maximum(1.0, jnp.abs(self.actual))
+        scale = self._scale()
         f = ~(d <= cfg.threshold * (scale if cfg.relative else 1.0))
         return f, (d / scale).astype(jnp.float32)
 
@@ -142,14 +159,22 @@ def _total(a: Array, cfg: ABFTConfig) -> Array:
     return total_checksum(a, cfg.dtype)
 
 
-def check_matmul(a: Array, b: Array, c: Array, cfg: ABFTConfig) -> Check:
+def check_matmul(a: Array, b: Array, c: Array, cfg: ABFTConfig,
+                 *, b_r: Optional[Array] = None) -> Check:
     """Split-ABFT check of an already-computed product c = a @ b.
 
     Batched operands are fine (leading axes broadcast): one scalar check per
-    batch element, reduced later by :func:`summarize`.
+    batch element, reduced later by :func:`summarize`.  A folded right
+    checksum ``b_r = B·e`` (from :func:`fold_w_r_tree` at weight-load time)
+    skips the per-step row-sum of B; it must have been folded at this
+    config's checksum dtype (validated — a stale fold raises).
     """
-    return Check(predicted=predicted_matmul_checksum(a, b, cfg.dtype),
-                 actual=_total(c, cfg))
+    if b_r is None:
+        pred = predicted_matmul_checksum(a, b, cfg.dtype)
+    else:
+        b_r = resolve_w_r(b, b_r, cfg)
+        pred = jnp.einsum("...k,...k->...", col_checksum(a, cfg.dtype), b_r)
+    return Check(predicted=pred, actual=_total(c, cfg))
 
 
 def checked_matmul(a: Array, b: Array, cfg: ABFTConfig,
@@ -172,6 +197,195 @@ def check_chain(mats: Sequence[Array], out: Array, cfg: ABFTConfig) -> Check:
         v = jnp.einsum("...k,...kj->...j", v, m.astype(cfg.dtype))
     pred = jnp.einsum("...k,...k->...", v, row_checksum(mats[-1], cfg.dtype))
     return Check(predicted=pred, actual=_total(out, cfg))
+
+
+# ---------------------------------------------------------------------------
+# The CheckedOp protocol and its op-generic fold/report algebra.
+#
+# Hoisted out of engine/api.py::gcn_layer/gcn_forward: nothing below is
+# GCN-specific.  An op's check vectors fold once at weight-load time
+# (resolve_w_r / fold_w_r_tree — the paper's "offline" eq.-5 convention),
+# the op returns (out, Check) at its declared granularity, and the report
+# algebra (summarize / per_op_report / per_graph_report / ...) reduces the
+# checks into verdicts the runtime guard acts on.
+# ---------------------------------------------------------------------------
+
+def resolve_w_r(w: Array, w_r: Optional[Array],
+                cfg: ABFTConfig) -> Optional[Array]:
+    """Resolve one op's right checksum w_r = W·e: computed at ``cfg.dtype``
+    when absent, validated against the REALIZED checksum dtype when folded
+    (x64-disabled f64 requests realize as f32), ``None`` when checking is
+    off.  Every CheckedOp implementation shares this so a stale fold raises
+    identically everywhere."""
+    if not cfg.enabled:
+        return None
+    if w_r is None:
+        return row_checksum(w, cfg.dtype)
+    want = jax.dtypes.canonicalize_dtype(jnp.dtype(cfg.dtype))
+    if jnp.asarray(w_r).dtype != want:
+        raise ValueError(
+            f"folded w_r has dtype {jnp.asarray(w_r).dtype} but "
+            f"cfg.dtype realizes as {want}: the checks would run at a "
+            f"stale precision.  Re-fold the params (fold_w_r_tree / "
+            f"engine.fold_w_r) after changing ABFTConfig.dtype (or drop "
+            f"the fold to recompute w_r per step)")
+    return w_r
+
+
+def fold_w_r_tree(params: Any, cfg: ABFTConfig, *, lead_axes: int = 0,
+                  compute_dtype: Any = None) -> Any:
+    """Tree-generic offline fold: walk any params pytree and add a folded
+    right checksum ``"w_r"`` next to every ``"w"`` weight leaf.
+
+    The convention is ``init_dense``'s: ``w`` is ``[d_in, *d_out]`` and the
+    fold sums over every output axis — ``w_r = W·e`` of the 2-D flattened
+    weight, one value per input feature.  ``lead_axes`` names leading
+    batch/stack axes to preserve (1 for scan-stacked transformer segment
+    params: each unit keeps its own fold).  Existing ``"w_r"`` entries are
+    overwritten — re-fold after any weight update or ``cfg.dtype`` change.
+    Non-dict leaves and dicts without a ``"w"`` array pass through
+    untouched, so one call folds a whole model: GCN ``params["layers"]``,
+    transformer QKV/MLP/head denses, GAT layers.
+
+    ``compute_dtype`` quantizes the weights to the model's compute dtype
+    *before* the checksum accumulation — pass the model's activation dtype
+    (e.g. bfloat16) so the folded prediction matches the weights the
+    product actually consumed; leaving it off on a low-precision model
+    injects the master-vs-compute quantization gap into every comparison.
+    """
+    if not cfg.enabled:
+        return params
+
+    def _fold(node):
+        if isinstance(node, dict):
+            out = {k: _fold(v) for k, v in node.items()}
+            w = node.get("w")
+            if w is not None and hasattr(w, "ndim") and \
+                    w.ndim >= 2 + lead_axes:
+                # fold on the array as-is (numpy stays numpy): the
+                # self-check re-derives with the SAME summation so the
+                # comparison is bitwise, and converting would change the
+                # reduction order
+                if compute_dtype is not None:
+                    w = w.astype(compute_dtype)
+                w = w.astype(cfg.dtype)
+                out["w_r"] = w.reshape(*w.shape[:1 + lead_axes], -1).sum(-1)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(_fold(v) for v in node)
+        return node
+
+    return _fold(params)
+
+
+class CheckedOp:
+    """Protocol for one checked op — the engine's unit of ABFT coverage.
+
+    A checked op takes its operands plus folded check vectors and returns
+    ``(out, Check)`` at a declared granularity::
+
+        op = SomeOp(...)
+        params = op.fold(params, cfg)          # offline, at weight load
+        out, check = op(cfg, *operands, **folded_check_vectors)
+
+    ``check`` is the registered-pytree :class:`Check` (or ``None`` when
+    ``cfg.mode == "none"``; ops whose policy emits several comparisons —
+    e.g. the split eq. 2–3 baseline — may return a list of Checks).  The
+    contract implementations must honour:
+
+      * the *predicted* side is computed only from the op's inputs and
+        folded vectors — never from the output (a fault would cancel);
+      * ``granularity`` declares what one comparison element attributes a
+        fault to (see :data:`GRANULARITIES`);
+      * ``op_id`` keys the op's verdicts in per-op reports and guard
+        repair sites (``"op:<id>"``) — stable across steps of one serving
+        trace.
+
+    Implementations: the GCN ``AggregationBackend``s (``engine/backends``),
+    the transformer LM ops (``engine/lm``), GAT layers (``engine/gat``),
+    and the Pallas kernels ``kernels/matmul_abft`` / ``flash_checksum``.
+    """
+
+    op_id: str = "op"
+    granularity: str = "layer"
+
+    def fold(self, params: Any, cfg: ABFTConfig) -> Any:
+        """Fold this op's check vectors into ``params`` at load time."""
+        return fold_w_r_tree(params, cfg)
+
+    def __call__(self, cfg: ABFTConfig, *operands, **folded):
+        raise NotImplementedError
+
+
+class MatmulOp(CheckedOp):
+    """Reference split-ABFT op (eqs. 2–3): ``out = A @ B``, one scalar
+    comparison, optional folded ``b_r``."""
+
+    op_id = "matmul"
+
+    def __call__(self, cfg: ABFTConfig, a: Array, b: Array, *,
+                 b_r: Optional[Array] = None):
+        c = jnp.matmul(a, b)
+        if not cfg.enabled:
+            return c, None
+        return c, check_matmul(a, b, c, cfg, b_r=b_r)
+
+
+class ChainOp(CheckedOp):
+    """Reference fused op (eqs. 4–6): ``out = M0 @ ... @ Mk`` with ONE
+    comparison for the whole linear chain, optional folded right checksum
+    of the last matrix."""
+
+    op_id = "chain"
+
+    def __call__(self, cfg: ABFTConfig, *mats: Array,
+                 w_r: Optional[Array] = None):
+        out = mats[0]
+        for m in mats[1:]:
+            out = jnp.matmul(out, m)
+        if not cfg.enabled:
+            return out, None
+        if w_r is None:
+            return out, check_chain(mats, out, cfg)
+        w_r = resolve_w_r(mats[-1], w_r, cfg)
+        v = col_checksum(mats[0], cfg.dtype)
+        for m in mats[1:-1]:
+            v = jnp.einsum("...k,...kj->...j", v, m.astype(cfg.dtype))
+        pred = jnp.einsum("...k,...k->...", v, w_r)
+        return out, Check(predicted=pred, actual=_total(out, cfg))
+
+
+def per_op_report(checks: Sequence[Optional[Check]], cfg: ABFTConfig, *,
+                  prefix: str = "op") -> tuple[tuple, Array, Array]:
+    """Per-op twin of :func:`summarize`: one verdict per check element,
+    keyed by a static op id.
+
+    Returns ``(op_ids, flags, max_rel)`` where ``op_ids`` is a tuple of
+    static strings and ``flags``/``max_rel`` are aligned ``[n_ops]``
+    vectors.  A check whose fields are batched — e.g. a scanned transformer
+    segment stacks one comparison per layer into ``[count]`` leaves —
+    contributes one verdict per element with a ``:L{j}`` suffix, so a
+    flagged op names the layer it fired in.  The ids are positional within
+    one step's static check structure: stable across steps of a compiled
+    serving trace, which is all the guard's persistent-site discrimination
+    needs.
+    """
+    checks = [c for c in checks if c is not None]
+    if not checks or not cfg.enabled:
+        return (), jnp.zeros((0,), bool), jnp.zeros((0,), jnp.float32)
+    ids: list = []
+    flags, rels = [], []
+    for i, c in enumerate(checks):
+        f, r = c.elementwise(cfg)
+        f, r = jnp.ravel(f), jnp.ravel(r)
+        n = int(f.shape[0])
+        if n == 1:
+            ids.append(f"{prefix}{i}")
+        else:
+            ids.extend(f"{prefix}{i}:L{j}" for j in range(n))
+        flags.append(f)
+        rels.append(r.astype(jnp.float32))
+    return tuple(ids), jnp.concatenate(flags), jnp.concatenate(rels)
 
 
 # ---------------------------------------------------------------------------

@@ -1,12 +1,15 @@
-"""Unified GCN engine: backend-dispatched layers, sharding, batching.
+"""Unified checked-op engine: backend-dispatched layers, sharding, batching.
 
 Public surface:
   api       — Graph, gcn_layer, gcn_forward, gcn_apply (the entry point)
-  backends  — AggregationBackend protocol + dense/bcoo/block_ell registry
+  backends  — AggregationBackend (a CheckedOp) + dense/bcoo/block_ell registry
   sharded   — Partition + shard_map'd stripe-sharded block-ELL aggregation
   batching  — bucketed padding of variable-size graphs for batched serving
   streaming — continuous-traffic serving: canonical rungs, online packing,
               double-buffered guarded dispatch, latency SLOs, backpressure
+  lm        — guarded transformer LM serving (fold_lm_w_r, LMEngine)
+  gat       — guarded GAT serving (attention-weighted aggregation under
+              the same eq. 4–6 chain checks)
 """
 from .api import (  # noqa: F401
     Graph,
@@ -51,4 +54,17 @@ from .streaming import (  # noqa: F401
     RungTable,
     StreamingEngine,
     plan_rungs,
+)
+from .lm import (  # noqa: F401
+    LMEngine,
+    fold_lm_w_r,
+    make_guarded_decode_step,
+    make_guarded_prefill_step,
+)
+from .gat import (  # noqa: F401
+    GATEngine,
+    gat_forward,
+    gat_layer,
+    init_gat,
+    make_gat_serve_step,
 )

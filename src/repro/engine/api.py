@@ -30,9 +30,10 @@ from repro.core.abft import (
     ABFTConfig,
     ABFTReport,
     Check,
+    fold_w_r_tree,
+    resolve_w_r,
     summarize,
 )
-from repro.core.checksum import row_checksum
 
 from .backends import AggregationBackend, make_backend
 
@@ -66,27 +67,10 @@ class Graph:
         return int(self.h0.shape[-2])
 
 
-def _resolve_w_r(w: Array, w_r: Optional[Array],
-                 cfg: ABFTConfig) -> Optional[Array]:
-    """The per-layer right checksum w_r = W·e, resolved once: computed at
-    ``cfg.dtype`` when absent, validated against the REALIZED checksum
-    dtype when folded (x64-disabled f64 requests realize as f32 — same
-    convention as the s_c auto-stash key), ``None`` when checking is off.
-    Shared by the per-layer path and the whole-network hook so a stale
-    fold raises identically on both."""
-    if not cfg.enabled:
-        return None
-    if w_r is None:
-        return row_checksum(w, cfg.dtype)
-    want = jax.dtypes.canonicalize_dtype(jnp.dtype(cfg.dtype))
-    if jnp.asarray(w_r).dtype != want:
-        raise ValueError(
-            f"folded w_r has dtype {jnp.asarray(w_r).dtype} but "
-            f"cfg.dtype realizes as {want}: the checks would run at a "
-            f"stale precision.  Re-run engine.fold_w_r(params, cfg) "
-            f"after changing ABFTConfig.dtype (or drop the fold to "
-            f"recompute w_r per step)")
-    return w_r
+# The per-layer right-checksum resolution (fold validation) is op-generic
+# and lives in core/abft.py now — kept under the historical name for the
+# localize/streaming callers that import it from here.
+_resolve_w_r = resolve_w_r
 
 
 def gcn_layer(bk: AggregationBackend, h: Array, w: Array, cfg: ABFTConfig,
@@ -146,12 +130,12 @@ def fold_w_r(params: Params, cfg: ABFTConfig) -> Params:
     ``cfg.dtype`` that the layer math consumes verbatim — bitwise-identical
     checks, zero per-step recompute.  Re-fold after any weight update (or
     if ``cfg.dtype`` changes).
+
+    Delegates to the tree-generic :func:`repro.core.abft.fold_w_r_tree`:
+    any params pytree folds (GCN ``{"layers": [...]}``, transformer trees,
+    GAT layers) — every dict with a ``"w"`` weight gains its ``"w_r"``.
     """
-    if not cfg.enabled:
-        return params
-    layers = [{**layer, "w_r": row_checksum(layer["w"], cfg.dtype)}
-              for layer in params["layers"]]
-    return {**params, "layers": layers}
+    return fold_w_r_tree(params, cfg)
 
 
 def gcn_forward(params: Params, graph: Graph, cfg: ABFTConfig, *,

@@ -35,7 +35,8 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.abft import GRANULARITIES, ABFTConfig, Check, _total
+from repro.core.abft import (GRANULARITIES, ABFTConfig, Check, CheckedOp,
+                             _total)
 from repro.core.checksum import col_checksum
 from repro.kernels.runtime import resolve_interpret
 
@@ -89,8 +90,19 @@ def infer_backend(s: Any) -> str:
     return "dense"
 
 
-class AggregationBackend:
+class AggregationBackend(CheckedOp):
     """Protocol base; subclasses implement :meth:`aggregate`.
+
+    An aggregation backend is a :class:`~repro.core.abft.CheckedOp`
+    implementation: calling it runs one whole GCN layer under the engine's
+    eq. 4–6 algebra —
+
+        h_out, checks = bk(cfg, h, w, w_r=folded_w_r)
+
+    — delegating to ``engine.gcn_layer`` (which in turn consults the
+    backend's :meth:`layer`/:meth:`network` fusion hooks and
+    :meth:`aggregate`).  Subclassers that only ever implemented
+    ``aggregate`` keep working unchanged; the CheckedOp surface is additive.
 
     Constructors take only the options they honour — an unknown or
     inapplicable keyword (``block_g`` on dense, a typo'd ``interpet``)
@@ -104,11 +116,22 @@ class AggregationBackend:
     """
 
     name = "abstract"
+    op_id = "gcn_layer"
     granularity = "layer"
 
     def __init__(self, s: Any, cfg: ABFTConfig, *, s_c: Optional[Array] = None,
                  partition=None):
         raise NotImplementedError
+
+    def __call__(self, cfg: ABFTConfig, h: Array, w: Array, *,
+                 w_r: Optional[Array] = None):
+        """CheckedOp entry point: one pre-activation GCN layer
+        ``H_out = S (H W)`` with its declared-granularity check(s)."""
+        from .api import gcn_layer
+        h_out, checks = gcn_layer(self, h, w, cfg, w_r=w_r)
+        if not checks:
+            return h_out, None
+        return h_out, (checks[0] if len(checks) == 1 else checks)
 
     def aggregate(self, x: Array, x_r: Optional[Array]
                   ) -> Tuple[Array, Optional[Check]]:

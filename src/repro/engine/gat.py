@@ -1,0 +1,216 @@
+"""Guarded GAT serving: attention-weighted aggregation as a checked op.
+
+A GAT layer is ``H' = A (H W)`` where the attention matrix A is a
+row-softmax of LeakyReLU pairwise scores masked to the adjacency.
+However A is *computed*, the product itself is a three-matrix chain, so
+the paper's eq. 4–6 applies verbatim:
+
+    eᵀ(A H W)e  =  (eᵀA) · (H w_r),      w_r = W e  (folded offline)
+
+One scalar corner per layer covers both matmuls: a corruption of
+X = H·W that also perturbs A still breaks the identity, because the
+predicted side re-reads H and the folded master w_r while the actual
+side sums the served output.  Checks are pre-activation (ELU between
+layers breaks the chain, exactly like ReLU in the GCN stack).
+
+:class:`GATEngine` serves layers under the same
+:class:`~repro.runtime.abft_guard.ABFTGuard` restore→retry→suspect
+ladder as the GCN and LM engines, keyed by ``op:gat{i}`` sites.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.abft import (
+    ABFTConfig,
+    Check,
+    CheckedOp,
+    fold_w_r_tree,
+    per_op_report,
+    resolve_w_r,
+    summarize,
+)
+from repro.core.checksum import col_checksum
+from repro.runtime.abft_guard import ABFTGuard, GuardConfig
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+_NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_gat(key, dims: Tuple[int, ...]) -> Params:
+    """dims = (f_in, g1, ..., gL): L layers, each {w [f,g], a_l [g],
+    a_r [g]}."""
+    layers = []
+    for i in range(len(dims) - 1):
+        f, g = dims[i], dims[i + 1]
+        kw, kl, kr = jax.random.split(jax.random.fold_in(key, i), 3)
+        layers.append({
+            "w": jax.random.normal(kw, (f, g), jnp.float32)
+            / jnp.sqrt(jnp.float32(f)),
+            "a_l": jax.random.normal(kl, (g,), jnp.float32) * 0.1,
+            "a_r": jax.random.normal(kr, (g,), jnp.float32) * 0.1,
+        })
+    return {"layers": layers}
+
+
+def fold_gat_w_r(params: Params, cfg: ABFTConfig) -> Params:
+    """Offline eq.-5 fold for every layer's W (tree-generic; a_l/a_r are
+    1-D and pass through untouched)."""
+    return fold_w_r_tree(params, cfg)
+
+
+# ---------------------------------------------------------------------------
+# layer / forward
+# ---------------------------------------------------------------------------
+
+def gat_layer(p: Params, h: Array, adj: Array, cfg: ABFTConfig, *,
+              w_r: Optional[Array] = None,
+              inject: Optional[Array] = None
+              ) -> Tuple[Array, Optional[Check]]:
+    """One GAT layer (single head).  h: [n, f]; adj: [n, n] (nonzero =
+    edge, self-loops included by the caller).  Returns pre-activation
+    (out, Check|None).
+
+    ``inject`` is the accumulator fault operand: a scalar delta added to
+    out[0, 0] *after* the aggregation — the predicted corner is computed
+    from the operands, so the upset is strictly detectable."""
+    w = p["w"].astype(h.dtype)
+    x = h @ w                                            # [n, g]
+    scores = x @ p["a_l"].astype(x.dtype)                # [n]
+    scores = scores[:, None] + (x @ p["a_r"].astype(x.dtype))[None, :]
+    scores = jax.nn.leaky_relu(scores, 0.2)
+    scores = jnp.where(adj > 0, scores, _NEG_INF)
+    att = jax.nn.softmax(scores, axis=-1)                # [n, n] rows sum 1
+    out = att @ x
+    if inject is not None:
+        out = out.at[0, 0].add(jnp.asarray(inject).astype(out.dtype))
+    if not cfg.enabled:
+        return out, None
+    wr = resolve_w_r(p["w"], w_r if w_r is not None else p.get("w_r"), cfg)
+    pred = jnp.dot(col_checksum(att, cfg.dtype),
+                   h.astype(cfg.dtype) @ wr.astype(cfg.dtype))
+    actual = out.astype(cfg.dtype).sum()
+    return out, Check(predicted=pred, actual=actual)
+
+
+class GATLayerOp(CheckedOp):
+    """The GAT layer as a protocol checked op (layer granularity)."""
+
+    op_id = "gat_layer"
+    granularity = "layer"
+
+    def __call__(self, cfg: ABFTConfig, h: Array, adj: Array, p: Params,
+                 **folded):
+        return gat_layer(p, h, adj, cfg, w_r=folded.get("w_r"))
+
+
+def gat_forward(params: Params, h: Array, adj: Array, cfg: ABFTConfig, *,
+                inject_layer: Optional[Array] = None,
+                inject_delta: Optional[Array] = None
+                ) -> Tuple[Array, List[Optional[Check]]]:
+    """Multi-layer GAT with ELU between layers; checks pre-activation.
+    ``inject_layer``/``inject_delta`` are runtime operands: the delta
+    fires in the one layer whose index matches (layers are a plain
+    Python list, so per-layer addressing is exact here)."""
+    checks: List[Optional[Check]] = []
+    n_layers = len(params["layers"])
+    for i, p in enumerate(params["layers"]):
+        inj = None
+        if inject_delta is not None:
+            layer = (jnp.asarray(-1, jnp.int32) if inject_layer is None
+                     else jnp.asarray(inject_layer, jnp.int32))
+            inj = jnp.where(layer == i, jnp.asarray(inject_delta), 0.0)
+        h, c = gat_layer(p, h, adj, cfg, inject=inj)
+        checks.append(c)
+        if i < n_layers - 1:
+            h = jax.nn.elu(h)
+    return h, checks
+
+
+# ---------------------------------------------------------------------------
+# guarded serving
+# ---------------------------------------------------------------------------
+
+def make_gat_serve_step(cfg: ABFTConfig) -> Callable:
+    """Jitted ``step(params, h, adj, inject_layer=-1, inject_delta=0.0)
+    -> (out, metrics)`` with per-op verdicts keyed ``gat{i}`` — the
+    :meth:`ABFTGuard.run_step` metrics shape."""
+    ids_box: dict = {"ids": ()}
+
+    def _step(params, h, adj, inject_layer, inject_delta):
+        out, checks = gat_forward(params, h, adj, cfg,
+                                  inject_layer=inject_layer,
+                                  inject_delta=inject_delta)
+        rep = summarize([c for c in checks if c is not None], cfg)
+        ids, op_flags, op_rel = per_op_report(checks, cfg, prefix="gat")
+        ids_box["ids"] = ids
+        return out, {"abft_flag": rep.flag, "abft_max_rel": rep.max_rel,
+                     "abft_op_flags": op_flags, "abft_op_rel": op_rel}
+
+    jitted = jax.jit(_step)
+
+    def step(params, h, adj, inject_layer=-1, inject_delta=0.0):
+        out, metrics = jitted(params, h, adj,
+                              jnp.asarray(inject_layer, jnp.int32),
+                              jnp.float32(inject_delta))
+        metrics = dict(metrics)
+        metrics["abft_op_ids"] = ids_box["ids"]
+        return out, metrics
+
+    step.traceable = jitted      # the string-free core, for abftlint traces
+    step.ids_box = ids_box
+    return step
+
+
+class GATEngine:
+    """Guarded GAT serving, mirroring :class:`~repro.engine.lm.LMEngine`:
+    pristine master params host-side, folded working copy, and the
+    restore→retry→suspect ladder with ``op:gat{i}`` sites."""
+
+    def __init__(self, cfg: ABFTConfig, params: Params, *,
+                 guard_cfg: Optional[GuardConfig] = None):
+        self.cfg = cfg
+        self._master = params
+        self.params = fold_gat_w_r(params, cfg)
+        self.guard = ABFTGuard(guard_cfg or GuardConfig(),
+                               restore_fn=self._restore)
+        self._step = make_gat_serve_step(cfg)
+
+    @classmethod
+    def init(cls, cfg: ABFTConfig, key, dims: Tuple[int, ...], **kw
+             ) -> "GATEngine":
+        return cls(cfg, init_gat(key, dims), **kw)
+
+    def _restore(self) -> Params:
+        self.params = fold_gat_w_r(self._master, self.cfg)
+        return self.params
+
+    def forward(self, h: Array, adj: Array, *, inject_layer: int = -1,
+                inject_delta: float = 0.0) -> Tuple[Array, dict]:
+        """One guarded forward.  An inject operand fires once (the
+        transient-fault convention — retries re-execute clean)."""
+        box = {"l": int(inject_layer), "d": float(inject_delta)}
+
+        def step(params, h_, adj_):
+            l, d = box["l"], box["d"]
+            box["l"], box["d"] = -1, 0.0
+            return self._step(params, h_, adj_, l, d)
+
+        out, m = self.guard.run_step(step, self.params, h, adj)
+        return out, m
+
+    def stats(self) -> dict:
+        s = {"steps": self.guard.steps, "flags": self.guard.flags,
+             "retries": self.guard.retries, "restores": self.guard.restores,
+             "flag_rate": self.guard.flag_rate}
+        s.update(self.guard.repair_tiers())
+        return s

@@ -1,0 +1,247 @@
+"""Guarded transformer LM serving on the checked-op protocol.
+
+The same eq. 4–6 algebra that checks a GCN layer checks every linear
+chain in a transformer step: QKV/attention-out/MLP matmuls are checked
+ops (split corners via :func:`repro.models.common.dense`), attention is
+the fused chain ``eᵀ(A V W_o)e = Σ o_extra`` with the carried column
+``vr = V·w_or`` (:mod:`repro.models.attention`).  This module adds the
+serving shell:
+
+* :func:`fold_lm_w_r` — one offline pass at weight load folding every
+  dense weight in the tree to its right checksum ``w_r`` (the paper's
+  eq.-5 offline convention, tree-generic via
+  :func:`repro.core.abft.fold_w_r_tree`).  The predicted side of every
+  check then comes from the *master* weights, so post-load weight
+  corruption is detectable.
+* :func:`make_guarded_prefill_step` / :func:`make_guarded_decode_step`
+  — jitted steps that emit per-op verdict vectors (``abft_op_flags``
+  aligned to a static ``abft_op_ids`` tuple) alongside the scalar
+  ``abft_flag``, in the metrics shape :class:`ABFTGuard` adjudicates.
+* :class:`LMEngine` — holds the pristine master params host-side and
+  serves prefill/decode under the guard's restore→retry→suspect ladder:
+  a transient flag is retried, a persistent one refolds the working
+  params from the master and replays, recurring ``op:<id>`` sites mark
+  the backend suspect.
+
+Checks are side computations: guarded logits are bit-identical to the
+unguarded forward on clean runs.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.abft import ABFTConfig, fold_w_r_tree, per_op_report
+from repro.models.common import cdtype
+from repro.models.transformer import (
+    init_model,
+    model_decode,
+    model_prefill,
+)
+from repro.runtime.abft_guard import ABFTGuard, GuardConfig
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# offline fold (eq. 5): every dense weight gains its right checksum
+# ---------------------------------------------------------------------------
+
+def fold_lm_w_r(params: Params, cfg: ModelConfig, abft: ABFTConfig) -> Params:
+    """Fold right checksums into an LM param tree at weight load.
+
+    Segment trees are layer-stacked on a leading axis (regardless of
+    ``cfg.scan_layers`` — unrolled application slices them), so they fold
+    with ``lead_axes=1``: ``w [L, d_in, *out] -> w_r [L, d_in]``, sliced
+    per layer to the ``[d_in]`` vector :func:`~repro.models.common.dense`
+    consumes.  The head folds flat.  Folds are taken through the compute
+    dtype so the comparison sees the same quantization the product does.
+    The embed table is left alone — the tied head checks against the
+    table directly.  Returns a new tree; ``params`` is not mutated."""
+    if not abft.enabled:
+        return params
+    cdt = cdtype(cfg)
+    out = dict(params)
+    out["segments"] = [fold_w_r_tree(seg, abft, lead_axes=1,
+                                     compute_dtype=cdt)
+                       for seg in params["segments"]]
+    if "head" in params:
+        out["head"] = fold_w_r_tree(params["head"], abft, compute_dtype=cdt)
+    if "encoder" in params and isinstance(params["encoder"], dict):
+        enc = dict(params["encoder"])
+        if "segments" in enc:
+            enc["segments"] = [fold_w_r_tree(seg, abft, lead_axes=1,
+                                             compute_dtype=cdt)
+                               for seg in enc["segments"]]
+        out["encoder"] = enc
+    return out
+
+
+# ---------------------------------------------------------------------------
+# guarded step factories — per-op verdicts in the guard's metrics shape
+# ---------------------------------------------------------------------------
+
+def _metrics(rep, checks, abft: ABFTConfig, ids_box: dict):
+    ids, op_flags, op_rel = per_op_report(checks, abft, prefix="op")
+    ids_box["ids"] = ids          # static; captured at trace time
+    return {"abft_flag": rep.flag, "abft_max_rel": rep.max_rel,
+            "abft_op_flags": op_flags, "abft_op_rel": op_rel}
+
+
+def make_guarded_prefill_step(cfg: ModelConfig, abft: ABFTConfig,
+                              cache_len: int) -> Callable:
+    """Jitted ``step(params, batch, inject=0.0) -> ((logits, states),
+    metrics)`` — the :meth:`ABFTGuard.run_step` shape, with per-op
+    verdicts.  ``inject`` is the attention-accumulator fault operand
+    (0.0 = clean); it is a runtime operand, not a trace constant.
+
+    The static op-id tuple cannot cross the jit boundary, so it is
+    captured in a box at trace time and attached to the metrics dict
+    host-side after each call."""
+    ids_box: dict = {"ids": ()}
+
+    def _step(params, batch, inject):
+        logits, states, rep, checks = model_prefill(
+            params, cfg, batch, abft, cache_len,
+            return_checks=True, attn_inject=inject)
+        return (logits, states), _metrics(rep, checks, abft, ids_box)
+
+    jitted = jax.jit(_step)
+
+    def step(params, batch, inject=0.0):
+        out, metrics = jitted(params, batch, jnp.float32(inject))
+        metrics = dict(metrics)
+        metrics["abft_op_ids"] = ids_box["ids"]
+        return out, metrics
+
+    step.traceable = jitted      # the string-free core, for abftlint traces
+    step.ids_box = ids_box
+    return step
+
+
+def make_guarded_decode_step(cfg: ModelConfig, abft: ABFTConfig) -> Callable:
+    """Jitted ``step(params, states, tokens, pos, inject=0.0) ->
+    ((logits, states), metrics)`` with per-op verdicts (see
+    :func:`make_guarded_prefill_step`)."""
+    ids_box: dict = {"ids": ()}
+
+    def _step(params, states, tokens, pos, inject):
+        logits, new_states, rep, checks = model_decode(
+            params, cfg, states, tokens, pos, abft,
+            return_checks=True, attn_inject=inject)
+        return (logits, new_states), _metrics(rep, checks, abft, ids_box)
+
+    jitted = jax.jit(_step)
+
+    def step(params, states, tokens, pos, inject=0.0):
+        out, metrics = jitted(params, states, tokens,
+                              jnp.asarray(pos, jnp.int32),
+                              jnp.float32(inject))
+        metrics = dict(metrics)
+        metrics["abft_op_ids"] = ids_box["ids"]
+        return out, metrics
+
+    step.traceable = jitted      # the string-free core, for abftlint traces
+    step.ids_box = ids_box
+    return step
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+class LMEngine:
+    """Guarded LM serving: prefill + decode under the ABFT ladder.
+
+    Keeps the pristine master params host-side; the working copy carries
+    the folded checksums.  ``restore_fn`` refolds from the master — this
+    both rewinds any in-memory weight corruption and refreshes every
+    ``w_r``, and its return value is adopted as the step's params operand
+    by :meth:`ABFTGuard.run_step`'s checkpoint-rollback convention.
+    """
+
+    def __init__(self, cfg: ModelConfig, abft: ABFTConfig, params: Params,
+                 *, cache_len: int = 128,
+                 guard_cfg: Optional[GuardConfig] = None):
+        self.cfg = cfg
+        self.abft = abft
+        self.cache_len = cache_len
+        self._master = params
+        self.params = fold_lm_w_r(params, cfg, abft)
+        self.guard = ABFTGuard(guard_cfg or GuardConfig(),
+                               restore_fn=self._restore)
+        self._prefill = make_guarded_prefill_step(cfg, abft, cache_len)
+        self._decode = make_guarded_decode_step(cfg, abft)
+
+    @classmethod
+    def init(cls, cfg: ModelConfig, abft: ABFTConfig, key, **kw
+             ) -> "LMEngine":
+        return cls(cfg, abft, init_model(cfg, key), **kw)
+
+    def _restore(self) -> Params:
+        self.params = fold_lm_w_r(self._master, self.cfg, self.abft)
+        return self.params
+
+    @staticmethod
+    def _fire_once(inject: float):
+        """A transient fault strikes one execution, not every replay: the
+        inject operand is consumed by the first attempt, so the guard's
+        retry re-executes clean (persistent faults live in the params and
+        survive retries on their own)."""
+        box = {"v": float(inject)}
+
+        def pop():
+            v, box["v"] = box["v"], 0.0
+            return v
+        return pop
+
+    def prefill(self, tokens: Array, *, inject: float = 0.0
+                ) -> Tuple[Array, List[Params], dict]:
+        """Run the prompt under the guard.  Returns (last-token logits,
+        decode states, metrics)."""
+        pop = self._fire_once(inject)
+        (logits, states), m = self.guard.run_step(
+            lambda params, batch: self._prefill(params, batch, pop()),
+            self.params, {"tokens": tokens})
+        return logits, states, m
+
+    def decode(self, states: List[Params], tokens: Array, pos,
+               *, inject: float = 0.0
+               ) -> Tuple[Array, List[Params], dict]:
+        """One guarded decode step.  tokens: [B,1]; pos: scalar."""
+        pop = self._fire_once(inject)
+        (logits, new_states), m = self.guard.run_step(
+            lambda params, states_, tokens_, pos_:
+                self._decode(params, states_, tokens_, pos_, pop()),
+            self.params, states, tokens, pos)
+        return logits, new_states, m
+
+    def generate(self, tokens: Array, n_steps: int,
+                 *, inject_at: Optional[int] = None,
+                 inject_delta: float = 0.0) -> Tuple[Array, dict]:
+        """Greedy generation loop: prefill then ``n_steps`` decode steps.
+        ``inject_at`` fires the accumulator fault operand on that decode
+        step (−1 = during prefill).  Returns ([B, n_steps] token ids,
+        final stats)."""
+        b, t = tokens.shape
+        inj = inject_delta if inject_at == -1 else 0.0
+        logits, states, _ = self.prefill(tokens, inject=inj)
+        outs = []
+        for i in range(n_steps):
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            outs.append(nxt)
+            inj = inject_delta if inject_at == i else 0.0
+            logits, states, _ = self.decode(states, nxt[:, None], t + i,
+                                            inject=inj)
+        return jnp.stack(outs, axis=1), self.stats()
+
+    def stats(self) -> dict:
+        s = {"steps": self.guard.steps, "flags": self.guard.flags,
+             "retries": self.guard.retries, "restores": self.guard.restores,
+             "flag_rate": self.guard.flag_rate}
+        s.update(self.guard.repair_tiers())
+        return s

@@ -49,7 +49,12 @@ import numpy as np
 
 from repro.core.abft import ABFTConfig, per_graph_report, summarize
 from repro.faults.injectors import FaultInjector
-from repro.faults.model import CHECK_PATH_SITES, FaultModel, sweep_models
+from repro.faults.model import (
+    CHECK_PATH_SITES,
+    FaultModel,
+    lm_sweep_models,
+    sweep_models,
+)
 from repro.faults.selfcheck import verify_s_c, verify_w_r
 from repro.runtime import ABFTGuard, GuardConfig
 
@@ -427,6 +432,220 @@ def run_fault_campaign(models: Optional[List[FaultModel]] = None, *,
             "false_positive_rate":
                 clean_flags / (pb.n_slots + (len(items) if need_dense
                                              else 0)),
+        },
+        "experiments": [e.to_dict() for e in experiments],
+        "by_site_kind": _aggregate(experiments),
+        "repair_tiers_total": {**tiers_total,
+                               "persistent_sites":
+                                   sorted(set(persistent_sites))},
+    }
+
+
+# ---------------------------------------------------------------------------
+# the LM lane — guarded transformer serving under the same fault grid
+# ---------------------------------------------------------------------------
+
+def run_lm_experiment(model: FaultModel, *, prefill, decode, master, fold,
+                      ref_logits, ref_tokens, tokens, prompt_len: int,
+                      n_steps: int,
+                      guard_cfg: Optional[GuardConfig] = None
+                      ) -> ExperimentResult:
+    """Run one LM fault model over a prefill + decode trajectory.
+
+    The trajectory replays the CLEAN reference's greedy tokens, so every
+    step's operands match the reference bitwise and divergence is a pure
+    fault signal.  Weight sites corrupt the working params (the fold
+    stays pristine — the post-load memory-fault class the offline eq.-5
+    fold makes detectable); ``attn_accumulator`` rides the ``attn_inject``
+    operand and fires once per step (the transient convention — the
+    guard's retry re-executes clean).  Every step runs through a real
+    :class:`ABFTGuard` whose restore refolds from the master, so flagged
+    steps come back repaired and the repair-tier distribution is real.
+    The naive-comparison / self-check columns are GCN-lane concepts and
+    stay empty here (LM sites are all data-path)."""
+    import jax.numpy as jnp
+
+    inj = FaultInjector(model)
+    state = {"params": fold(master)}
+
+    def restore():
+        state["params"] = fold(master)
+        return state["params"]
+
+    guard = ABFTGuard(guard_cfg if guard_cfg is not None
+                      else GuardConfig(max_retries=1, max_restores=1,
+                                       persistent_window=4,
+                                       persistent_threshold=2),
+                      restore_fn=restore)
+    fired_steps: List[int] = []
+    flagged_steps: List[int] = []
+    sdc_steps: List[int] = []
+    masked_steps: List[int] = []
+    fp_steps: List[int] = []
+    escalations = 0
+    states = None
+
+    for t in range(n_steps):          # t=0 prefill, t>=1 decode steps
+        fired = inj.fires(t)
+        if fired:
+            fired_steps.append(t)
+            if model.site in ("qkv_w", "mlp_w"):
+                state["params"] = inj.apply_lm_params(state["params"])
+        # fire-once box: a transient inject strikes the first attempt
+        # only, so retries/replays re-execute clean
+        box = {"v": float(inj.lm_inject()) if fired else 0.0}  # abftlint: sync-ok (host-side fault model)
+
+        def pop():
+            v, box["v"] = box["v"], 0.0
+            return v
+
+        flags0 = guard.flags
+        try:
+            if t == 0:
+                (lg, states), _m = guard.run_step(
+                    lambda params, batch: prefill(params, batch, pop()),
+                    state["params"], {"tokens": tokens})
+            else:
+                (lg, states), _m = guard.run_step(
+                    lambda params, st, tk, pos:
+                        decode(params, st, tk, pos, pop()),
+                    state["params"], states, ref_tokens[t - 1],
+                    prompt_len + t - 1)
+        except RuntimeError:
+            # guard refused to verify after max_restores — eviction
+            # advice.  Recover with a clean unguarded step so the
+            # trajectory (decode states) can continue.
+            escalations += 1
+            flagged_steps.append(t)
+            state["params"] = fold(master)
+            if t == 0:
+                (lg, states), _m = prefill(state["params"],
+                                           {"tokens": tokens})
+            else:
+                (lg, states), _m = decode(state["params"], states,
+                                          ref_tokens[t - 1],
+                                          prompt_len + t - 1)
+            continue
+
+        flagged = guard.flags > flags0
+        if flagged:
+            flagged_steps.append(t)
+        diverged = not np.array_equal(  # abftlint: sync-ok (host classify)
+            np.asarray(lg), ref_logits[t])  # abftlint: sync-ok (host classify)
+        if fired and not flagged:
+            (sdc_steps if diverged else masked_steps).append(t)
+        if not fired and flagged:
+            fp_steps.append(t)
+
+    detected_steps = [t for t in flagged_steps if t in fired_steps]
+    detected = bool(detected_steps)
+    latency = (detected_steps[0] - fired_steps[0]
+               if detected and fired_steps else None)
+    return ExperimentResult(
+        model=model, steps=n_steps, fired_steps=fired_steps,
+        flagged_steps=flagged_steps, naive_flagged_steps=[],
+        detected=detected, detection_latency=latency,
+        sdc_steps=sdc_steps, masked_steps=masked_steps,
+        false_positive_steps=fp_steps,
+        selfcheck_detected=False, selfcheck_step=None,
+        would_be_false_negative=False,
+        escalated=escalations > 0,
+        repair_tiers=guard.repair_tiers())
+
+
+def run_lm_fault_campaign(models: Optional[List[FaultModel]] = None, *,
+                          n_decode: int = 3, prompt_len: int = 8,
+                          batch: int = 1, cache_len: int = 32,
+                          threshold: float = 1e-3, seed: int = 0,
+                          guard_cfg: Optional[GuardConfig] = None,
+                          verbose: bool = False) -> dict:
+    """Sweep ``models`` (default: :func:`lm_sweep_models` grid) over a
+    guarded smoke-LM serving trajectory; returns the JSON-ready payload
+    in the same shape as :func:`run_fault_campaign`.
+
+    The LM lane's CI gate mirrors the GCN ``accumulator`` gate: every
+    above-threshold ``attn_accumulator`` upset must be detected, and the
+    clean control must not flag."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, smoke_config
+    from repro.engine.lm import (
+        fold_lm_w_r,
+        make_guarded_decode_step,
+        make_guarded_prefill_step,
+    )
+    from repro.kernels.runtime import resolve_interpret
+    from repro.models.transformer import init_model
+
+    interp = resolve_interpret(None)
+    cfg = smoke_config(get_config("gemma-2b"))
+    abft = ABFTConfig(mode="fused", dtype=jnp.float32, threshold=threshold)
+    master = init_model(cfg, jax.random.PRNGKey(seed))
+
+    def fold(p):
+        return fold_lm_w_r(p, cfg, abft)
+
+    # one pair of jitted steps shared by every experiment (same shapes
+    # throughout — exactly two compiles for the whole campaign)
+    prefill = make_guarded_prefill_step(cfg, abft, cache_len)
+    decode = make_guarded_decode_step(cfg, abft)
+    if models is None:
+        models = lm_sweep_models(step=1, seed=seed)
+    n_steps = 1 + n_decode
+
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(rng.integers(1, cfg.vocab_size,
+                                      size=(batch, prompt_len)), jnp.int32)
+
+    # clean reference trajectory — greedy tokens recorded so every
+    # experiment replays identical operands; any flag here is a clean
+    # false positive and fails the campaign gate
+    params0 = fold(master)
+    (lg, states), m0 = prefill(params0, {"tokens": tokens})
+    clean_flags = int(bool(np.asarray(m0["abft_flag"])))  # abftlint: sync-ok
+    ref_logits = [np.asarray(lg)]
+    ref_tokens = []
+    for i in range(n_decode):
+        nxt = np.asarray(  # abftlint: sync-ok (host greedy sample)
+            lg[:, -1].argmax(-1)).astype(np.int32)[:, None]
+        ref_tokens.append(jnp.asarray(nxt))
+        (lg, states), mi = decode(params0, states, ref_tokens[-1],
+                                  prompt_len + i)
+        clean_flags += int(bool(np.asarray(mi["abft_flag"])))  # abftlint: sync-ok
+        ref_logits.append(np.asarray(lg))  # abftlint: sync-ok (reference trace)
+
+    experiments = []
+    for m in models:
+        if verbose:
+            print(f"lm_fault_campaign: {m.label()} (seed={m.seed})")
+        experiments.append(run_lm_experiment(
+            m, prefill=prefill, decode=decode, master=master, fold=fold,
+            ref_logits=ref_logits, ref_tokens=ref_tokens, tokens=tokens,
+            prompt_len=prompt_len, n_steps=n_steps, guard_cfg=guard_cfg))
+
+    tiers_total: Dict[str, Any] = {"slot": 0, "stripe": 0, "graph": 0,
+                                   "restore": 0,
+                                   "persistent_escalations": 0}
+    persistent_sites: List[str] = []
+    for e in experiments:
+        for k in ("slot", "stripe", "graph", "restore",
+                  "persistent_escalations"):
+            tiers_total[k] += e.repair_tiers[k]
+        persistent_sites.extend(e.repair_tiers["persistent_sites"])
+
+    return {
+        "benchmark": "lm_fault_campaign",
+        "backend": jax.default_backend(),
+        "interpret": bool(interp),
+        "authoritative": not bool(interp),
+        "config": {"model": cfg.name, "n_decode": n_decode,
+                   "prompt_len": prompt_len, "batch": batch,
+                   "cache_len": cache_len, "threshold": threshold,
+                   "seed": seed, "n_models": len(models)},
+        "clean_control": {
+            "flagged": clean_flags,
+            "false_positive_rate": clean_flags / n_steps,
         },
         "experiments": [e.to_dict() for e in experiments],
         "by_site_kind": _aggregate(experiments),

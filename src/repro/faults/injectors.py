@@ -196,3 +196,39 @@ class FaultInjector:
         if m.site != "accumulator":
             return None
         return (m.layer, m.stripe, m.slot, m.delta)
+
+    # -- LM site hooks ----------------------------------------------------
+
+    def apply_lm_params(self, params):
+        """qkv_w / mlp_w sites: corrupt one layer's slice of the stacked
+        transformer weights (``attn.wq.w`` / ``mlp.wi.w``, shape
+        ``[L, d_in, *out]``) in a shallow-copied param tree.  The offline
+        fold (``w_r``) is left pristine, so the corruption is the
+        detectable post-load memory-fault class."""
+        m = self.model
+        if m.site not in ("qkv_w", "mlp_w"):
+            return params
+        path = ("attn", "wq") if m.site == "qkv_w" else ("mlp", "wi")
+        segments = list(params["segments"])
+        for si, seg in enumerate(segments):
+            for uname in sorted(seg):
+                unit = seg[uname]
+                blk = unit.get(path[0]) if isinstance(unit, dict) else None
+                dns = blk.get(path[1]) if isinstance(blk, dict) else None
+                if not (isinstance(dns, dict) and "w" in dns):
+                    continue
+                w = np.array(dns["w"])  # [L, d_in, *out] # abftlint: sync-ok
+                li = m.layer % w.shape[0]
+                w[li] = self.corrupt_array(
+                    m.site, w[li]).reshape(w[li].shape)
+                segments[si] = {**seg, uname: {
+                    **unit, path[0]: {**blk, path[1]: {**dns, "w": w}}}}
+                return {**params, "segments": segments}
+        raise ValueError(f"fault site {m.site!r}: no "
+                         f"{'/'.join(path)} dense in the param tree")
+
+    def lm_inject(self) -> float:
+        """attn_accumulator site: the ``attn_inject`` operand delta for
+        this step (0.0 when the site is something else)."""
+        m = self.model
+        return m.delta if m.site == "attn_accumulator" else 0.0

@@ -30,6 +30,18 @@ Sites (what the bits belong to):
 * ``s_c``         — the offline adjacency column checksum e^T·S (dense /
   BCOO serving path).  Check path again; self-check territory.
 
+LM sites (the guarded transformer lane — :class:`~repro.engine.lm.LMEngine`):
+
+* ``qkv_w``       — an element of a layer's stacked attention projection
+  weights (Q by convention; ``index`` addresses the flat slice).  The
+  offline fold predates the corruption → detectable, repaired by the
+  guard's restore-and-refold.
+* ``mlp_w``       — same class, the layer's MLP input projection.
+* ``attn_accumulator`` — the attention output accumulator O = A·V, via
+  the ``attn_inject`` operand: the carried column o_extra is accumulated
+  independently, so the fused chain check must flag it 100% (the LM CI
+  gate, mirroring the GCN ``accumulator`` gate).
+
 Kinds: ``bitflip`` (transient single-event upset — fires once, the
 corrupted value is overwritten by the next clean write/retry),
 ``stuck`` (sticky stuck-at — the corruption re-applies every step from
@@ -46,7 +58,12 @@ import dataclasses
 import math
 from typing import Optional, Tuple
 
-SITES = ("weights", "features", "cols_table", "accumulator", "w_r", "s_c")
+SITES = ("weights", "features", "cols_table", "accumulator", "w_r", "s_c",
+         "qkv_w", "mlp_w", "attn_accumulator")
+# the LM lane's sites (guarded transformer serving)
+LM_SITES = ("qkv_w", "mlp_w", "attn_accumulator")
+# the GCN serving lane's sites (everything the packed/dense hooks serve)
+GCN_SITES = tuple(s for s in SITES if s not in LM_SITES)
 KINDS = ("bitflip", "stuck", "multi")
 TIMINGS = ("targeted", "bernoulli")
 
@@ -104,7 +121,8 @@ class FaultModel:
             raise ValueError("n_upsets != 1 is kind='multi' only")
         if self.stuck_value is not None and self.kind != "stuck":
             raise ValueError("stuck_value is kind='stuck' only")
-        if self.site == "accumulator" and not math.isfinite(self.delta):
+        if self.site in ("accumulator", "attn_accumulator") \
+                and not math.isfinite(self.delta):
             raise ValueError("accumulator delta must be finite (the hook "
                              "adds it into one accumulation step)")
 
@@ -133,7 +151,25 @@ class FaultModel:
         return d
 
 
-def sweep_models(sites: Tuple[str, ...] = SITES,
+def lm_sweep_models(*, reps: int = 2, step: int = 1, bit: int = 30,
+                    delta: float = 25.0, seed: int = 0) -> list:
+    """The LM lane's grid: weight sites x {bitflip, stuck} plus the
+    attention-accumulator transient (the LM analog of the GCN
+    ``accumulator`` gate site)."""
+    models = []
+    for site in ("qkv_w", "mlp_w"):
+        for kind in ("bitflip", "stuck"):
+            for r in range(reps):
+                models.append(FaultModel(site=site, kind=kind, step=step,
+                                         bit=bit, seed=seed + 1000 * r))
+    for r in range(reps):
+        models.append(FaultModel(site="attn_accumulator", kind="bitflip",
+                                 step=step, delta=delta,
+                                 seed=seed + 1000 * r))
+    return models
+
+
+def sweep_models(sites: Tuple[str, ...] = GCN_SITES,
                  kinds: Tuple[str, ...] = ("bitflip", "stuck"),
                  *, reps: int = 2, step: int = 1, bit: int = 30,
                  seed: int = 0) -> list:

@@ -1,13 +1,15 @@
-"""jit'd wrapper: head grouping, W_o folding, padding, Check construction."""
+"""jit'd wrapper: head grouping, W_o folding, padding, Check construction —
+plus the :class:`FlashAttentionOp` CheckedOp that runs the whole
+A·V·W_o chain (flash attention + output projection) as ONE checked op."""
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.abft import Check
+from repro.core.abft import ABFTConfig, Check, CheckedOp
 
 from .kernel import flash_checksum_kernel
 
@@ -59,6 +61,56 @@ def flash_attention_checksum(q, k, v, w_or, *, causal: bool = True,
     return o, ex
 
 
-def chain_check(o_extra: jax.Array, out_after_wo: jax.Array) -> Check:
+def chain_check(o_extra: jax.Array, out_after_wo: jax.Array, *,
+                granularity: str = "layer") -> Check:
+    """Close the eq. 4–6 chain: Σ o_extra (the kernel's carried column,
+    independent of the output path) vs Σ(attn_out·W_o).  Returns the
+    registered-pytree :class:`Check` with an explicit granularity aux —
+    compare via ``Check.flag(cfg)``, whose ``~(d <= tau*scale)`` form
+    flags NaN divergences instead of silently passing them."""
     return Check(predicted=o_extra.astype(jnp.float32).sum(),
-                 actual=out_after_wo.astype(jnp.float32).sum())
+                 actual=out_after_wo.astype(jnp.float32).sum(),
+                 granularity=granularity)
+
+
+def fold_w_or(wo: jax.Array, n_heads: int, hd: int) -> jax.Array:
+    """Offline fold of the output projection's right checksum into the
+    per-head carried-column form: ``w_or[h, dh]`` = the head-``h`` slice of
+    W_o·e.  ``wo`` is ``[H*dh, d]`` (the ``init_dense`` layout)."""
+    return wo.astype(jnp.float32).sum(axis=1).reshape(n_heads, hd)
+
+
+class FlashAttentionOp(CheckedOp):
+    """CheckedOp over the flash-checksum kernel: the three-matrix chain
+    ``out = A · V · W_o`` (A never materialized) with the paper's single
+    eq. 4–6 comparison carried as one extra accumulator column.
+
+    ``out, check = op(cfg, q, k, v, wo, w_or=folded)`` where ``wo`` is the
+    ``[H*dh, d]`` output projection and ``w_or`` its per-head folded right
+    checksum (:func:`fold_w_or`; recomputed when absent).  The predicted
+    side rides the kernel's carried column — computed from Q/K/V/w_or only,
+    never from the output — so a fault anywhere in the attention
+    accumulator or the W_o matmul trips the comparison.
+    """
+
+    op_id = "flash_attention"
+
+    def __init__(self, *, causal: bool = True, block_q: int = 128,
+                 block_k: int = 128, interpret: bool = False):
+        self.causal = causal
+        self.block_q, self.block_k = block_q, block_k
+        self.interpret = interpret
+
+    def __call__(self, cfg: ABFTConfig, q: jax.Array, k: jax.Array,
+                 v: jax.Array, wo: jax.Array, *,
+                 w_or: Optional[jax.Array] = None):
+        b, t, h, dh = q.shape
+        if w_or is None:
+            w_or = fold_w_or(wo, h, dh)
+        o, o_extra = flash_attention_checksum(
+            q, k, v, w_or, causal=self.causal, block_q=self.block_q,
+            block_k=self.block_k, interpret=self.interpret)
+        out = o.reshape(b, t, h * dh) @ wo.astype(o.dtype)
+        if not cfg.enabled:
+            return out, None
+        return out, chain_check(o_extra, out)

@@ -1,5 +1,6 @@
 """jit'd public wrapper for the matmul_abft Pallas kernel: padding to block
-multiples, final block-sum reduction, Check construction."""
+multiples, final block-sum reduction, Check construction — plus the
+:class:`MatmulAbftOp` CheckedOp conforming to the engine protocol."""
 from __future__ import annotations
 
 import functools
@@ -8,8 +9,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.abft import ABFTConfig, Check
-from repro.core.checksum import col_checksum
+from repro.core.abft import ABFTConfig, Check, CheckedOp, resolve_w_r
 
 from .kernel import matmul_abft_kernel
 
@@ -30,15 +30,20 @@ def matmul_abft(a: jax.Array, b: jax.Array, br: Optional[jax.Array] = None, *,
                 interpret: bool = False) -> Tuple[jax.Array, Check]:
     """C = A @ B with the fused ABFT check computed in the same pass.
 
-    ``br`` is the offline right-checksum column B·e; recomputed here when not
-    supplied (weights: fold it at load time).  Returns (C, Check) where
-    Check.predicted = (eᵀA)·(B e) and Check.actual = Σ C — both produced by
-    the kernel epilogue, not a second HBM pass.
+    ``br`` is the offline right-checksum column B·e (``[k]`` or ``[k, 1]``);
+    recomputed here when not supplied (weights: fold it at load time).
+    Returns (C, Check) where Check.predicted = (eᵀA)·(B e) and
+    Check.actual = Σ C — both produced by the kernel epilogue, not a second
+    HBM pass.  The Check is the registered-pytree engine type at explicit
+    ``"layer"`` granularity (one scalar corner for the whole product);
+    compare it NaN-safely via ``Check.flag(cfg)`` — a NaN divergence flags.
     """
     m, k = a.shape
     _, n = b.shape
     if br is None:
         br = b.astype(jnp.float32).sum(axis=1, keepdims=True)
+    elif br.ndim == 1:
+        br = br[:, None]
     ap = _pad_to(_pad_to(a, block_m, 0), block_k, 1)
     bp = _pad_to(_pad_to(b, block_k, 0), block_n, 1)
     brp = _pad_to(br, block_k, 0)
@@ -48,4 +53,31 @@ def matmul_abft(a: jax.Array, b: jax.Array, br: Optional[jax.Array] = None, *,
     c = c[:m, :n]
     actual = block_sums.sum()                       # O(#blocks) reduce
     predicted = extra[:m, 0].sum()                  # Σ (A b_r) = eᵀA B e
-    return c, Check(predicted=predicted, actual=actual)
+    return c, Check(predicted=predicted, actual=actual, granularity="layer")
+
+
+class MatmulAbftOp(CheckedOp):
+    """CheckedOp over the Pallas fused-epilogue matmul kernel.
+
+    ``out, check = op(cfg, a, b, w_r=folded)`` — the kernel computes the
+    product and both checksum corners in one HBM pass; a folded ``w_r``
+    (validated against ``cfg.dtype``) skips the per-call row-sum of B.
+    Drop-in for :class:`~repro.core.abft.MatmulOp` where the operands are
+    2-D and the platform compiles Pallas (pass ``interpret=True`` on CPU).
+    """
+
+    op_id = "matmul_abft"
+
+    def __init__(self, *, block_m: int = 128, block_n: int = 128,
+                 block_k: int = 128, interpret: bool = False):
+        self.block_m, self.block_n, self.block_k = block_m, block_n, block_k
+        self.interpret = interpret
+
+    def __call__(self, cfg: ABFTConfig, a: jax.Array, b: jax.Array, *,
+                 w_r: Optional[jax.Array] = None):
+        w_r = resolve_w_r(b, w_r, cfg) if cfg.enabled else None
+        c, check = matmul_abft(a, b, w_r,
+                               block_m=self.block_m, block_n=self.block_n,
+                               block_k=self.block_k,
+                               interpret=self.interpret)
+        return c, (check if cfg.enabled else None)

@@ -14,6 +14,15 @@ SDC rates for the architecturally-silent consistent-corruption sites
 corruption, and the would-be NaN false negatives closed by the NaN-safe
 comparison + periodic self-check all land in the JSON payload, stamped
 ``interpret``/``authoritative`` like every other benchmark here.
+
+``--lane lm`` runs the guarded-transformer grid instead (qkv_w / mlp_w
+weight corruption + the attn_accumulator transient, served through
+:class:`~repro.engine.lm.LMEngine`-style guarded steps); its gate is
+the LM mirror of the accumulator gate — attn_accumulator AND weight
+detection 100%, clean control clean:
+
+    PYTHONPATH=src python -m repro.launch.campaign --lane lm \
+        --assert-gates --json BENCH_lm_fault_campaign.json
 """
 from __future__ import annotations
 
@@ -22,12 +31,19 @@ import json
 import sys
 from typing import Optional, Sequence
 
-from repro.faults.campaign import run_fault_campaign
-from repro.faults.model import sweep_models
+from repro.faults.campaign import run_fault_campaign, run_lm_fault_campaign
+from repro.faults.model import lm_sweep_models, sweep_models
+
+# the per-lane gate prefixes asserted at 100% detection by --assert-gates
+_GATED_SITES = {"gcn": ("accumulator/",),
+                "lm": ("attn_accumulator/", "qkv_w/", "mlp_w/")}
 
 
 def main(argv: Optional[Sequence[str]] = None) -> dict:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--lane", choices=("gcn", "lm"), default="gcn",
+                    help="gcn: packed GCN serving grid (default); "
+                         "lm: guarded transformer prefill/decode grid")
     ap.add_argument("--graphs", type=int, default=4,
                     help="graphs per packed serving batch")
     ap.add_argument("--steps", type=int, default=4,
@@ -49,27 +65,44 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="one model per (site, kind) cell — the CI lane")
-    ap.add_argument("--json", default="BENCH_fault_campaign.json",
+    ap.add_argument("--decode-steps", type=int, default=3,
+                    help="[lm] decode steps after the prefill")
+    ap.add_argument("--prompt-len", type=int, default=8,
+                    help="[lm] prompt length of the prefill")
+    ap.add_argument("--json", default=None,
                     help="write the machine-readable payload here "
-                         "('' disables)")
+                         "(default BENCH_<lane>_fault_campaign.json; "
+                         "'' disables)")
     ap.add_argument("--assert-gates", action="store_true",
                     help="exit non-zero unless accumulator detection is "
                          "100%% and the clean control has zero flags")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
+    if args.json is None:
+        args.json = ("BENCH_fault_campaign.json" if args.lane == "gcn"
+                     else "BENCH_lm_fault_campaign.json")
 
-    n_lo, n_hi = (int(v) for v in args.nodes.split(","))
-    models = sweep_models(reps=1 if args.smoke else args.reps,
-                          step=args.fault_step, bit=args.bit,
-                          seed=args.seed)
-    print(f"=== fault_campaign: {len(models)} fault models x "
-          f"{args.steps} steps ({args.graphs} graphs/batch) ===")
-
-    payload = run_fault_campaign(
-        models, n_graphs=args.graphs, n_steps=args.steps,
-        n_lo=n_lo, n_hi=n_hi, feat=args.feat, hidden=args.hidden,
-        n_out=args.classes, block=args.block, threshold=args.threshold,
-        seed=args.seed, verbose=args.verbose)
+    if args.lane == "lm":
+        models = lm_sweep_models(reps=1 if args.smoke else args.reps,
+                                 step=args.fault_step, bit=args.bit,
+                                 seed=args.seed)
+        print(f"=== lm_fault_campaign: {len(models)} fault models x "
+              f"prefill+{args.decode_steps} decode steps ===")
+        payload = run_lm_fault_campaign(
+            models, n_decode=args.decode_steps, prompt_len=args.prompt_len,
+            threshold=args.threshold, seed=args.seed, verbose=args.verbose)
+    else:
+        n_lo, n_hi = (int(v) for v in args.nodes.split(","))
+        models = sweep_models(reps=1 if args.smoke else args.reps,
+                              step=args.fault_step, bit=args.bit,
+                              seed=args.seed)
+        print(f"=== fault_campaign: {len(models)} fault models x "
+              f"{args.steps} steps ({args.graphs} graphs/batch) ===")
+        payload = run_fault_campaign(
+            models, n_graphs=args.graphs, n_steps=args.steps,
+            n_lo=n_lo, n_hi=n_hi, feat=args.feat, hidden=args.hidden,
+            n_out=args.classes, block=args.block, threshold=args.threshold,
+            seed=args.seed, verbose=args.verbose)
 
     for key, agg in payload["by_site_kind"].items():
         lat = agg["mean_detection_latency"]
@@ -102,23 +135,24 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
         print(f"wrote {args.json}")
 
     if args.assert_gates:
+        gated = _GATED_SITES[args.lane]
         failures = []
         for key, agg in payload["by_site_kind"].items():
-            if key.startswith("accumulator/") \
-                    and agg["detection_rate"] < 1.0:
+            if key.startswith(gated) and agg["detection_rate"] < 1.0:
                 failures.append(
                     f"{key}: detection {agg['detection_rate']:.2f} < 1.0 "
-                    "for above-threshold accumulator upsets")
+                    "for above-threshold gated-site upsets")
         if payload["clean_control"]["flagged"]:
             failures.append(
                 f"clean control flagged "
-                f"{payload['clean_control']['flagged']} graphs "
+                f"{payload['clean_control']['flagged']} steps "
                 "(expected zero false positives)")
         if failures:
             for f in failures:
                 print(f"FAIL: {f}", file=sys.stderr)
             sys.exit(1)
-        print("gates: accumulator detection 100%, clean control clean")
+        print(f"gates: {'/'.join(g.rstrip('/') for g in gated)} "
+              "detection 100%, clean control clean")
     return payload
 
 

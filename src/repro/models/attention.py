@@ -47,10 +47,66 @@ def init_attention(key, cfg: ModelConfig, cross: bool = False) -> Params:
 
 
 def _fold_wo_checkcol(p: Params, cfg: ModelConfig, dtype) -> Array:
-    """w_or[h, hd] = per-head slice of W_o · e (offline in deployment)."""
+    """w_or[h, hd] = per-head slice of W_o · e (offline in deployment).
+
+    Consumes the tree-generic ``fold_w_r_tree`` fold when present
+    (``p["wo"]["w_r"]``, [H*hd]) — the carried column then predicts from
+    the load-time master weights, so a post-load W_o corruption trips the
+    chain check instead of cancelling."""
+    w_r = p["wo"].get("w_r")
+    if w_r is not None and w_r.shape == (cfg.n_heads * cfg.hd,):
+        return w_r.astype(jnp.float32).reshape(cfg.n_heads,
+                                               cfg.hd).astype(dtype)
     wo = p["wo"]["w"].astype(jnp.float32)            # [H*hd, d]
     w_or = wo.sum(axis=1).reshape(cfg.n_heads, cfg.hd)
     return w_or.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# fault-injection hook (campaign / e2e repair tests): the device-side
+# attention-accumulator site, mirroring the GCN kernels' inject= tuple.
+# ---------------------------------------------------------------------------
+
+_ATTN_INJECT = {"value": None}
+
+
+class attention_fault_injection:
+    """Bind a delta operand to the attention-accumulator inject site.
+
+    The model entry points (``model_prefill`` / ``model_decode`` with
+    ``attn_inject=...``) set this around their body so that every
+    attention call traced inside reads the *same traced scalar* — the
+    injection is an **operand** of the step, not a trace-time constant,
+    so a jitted step can flip the fault on and off at runtime without
+    retracing (mirroring the GCN kernels' ``inject=`` tuple idiom).
+
+    The delta lands on element 0 of the accumulator O = A·V at every
+    attention site sharing the trace (scanned/stacked units share one
+    trace, so per-layer addressing is impossible here; address layers
+    through the weight sites instead).  An accumulator upset is exactly
+    what the eq. 4–6 chain check must catch, because the carried column
+    o_extra is accumulated independently.
+    """
+
+    def __init__(self, value):
+        self.value = value
+
+    def __enter__(self):
+        self._prev = _ATTN_INJECT["value"]
+        _ATTN_INJECT["value"] = self.value
+        return self
+
+    def __exit__(self, *exc):
+        _ATTN_INJECT["value"] = self._prev
+        return False
+
+
+def _maybe_inject(o: Array) -> Array:
+    val = _ATTN_INJECT["value"]
+    if val is None:
+        return o
+    flat = o.reshape(-1)
+    return flat.at[0].add(jnp.asarray(val).astype(flat.dtype)).reshape(o.shape)
 
 
 def _project_qkv(p: Params, x: Array, kv_x: Array, cfg: ModelConfig,
@@ -264,6 +320,7 @@ def attention_block(
     o, o_extra, m, l = streaming_attention(
         q, k, v, vr, q_positions=positions, k_positions=kv_positions,
         causal=causal, window=window, chunk=min(cfg.attn_chunk, s))
+    o = _maybe_inject(o)
 
     out, oc = dense(p["wo"], o.reshape(b, t, -1).astype(x.dtype),
                     abft if abft.mode == "split" else
@@ -362,6 +419,7 @@ def attention_decode(
     o, o_extra, m, l = streaming_attention(
         q, k, v, vr, q_positions=positions, k_positions=kpos,
         causal=True, window=window, chunk=length)
+    o = _maybe_inject(o)
 
     out, oc = dense(p["wo"], o.reshape(b, 1, -1).astype(x.dtype),
                     abft if abft.mode == "split" else ABFTConfig(mode="none"))

@@ -149,7 +149,15 @@ def unembed(p: Params, x: Array, cfg: ModelConfig,
 def dense(p: Params, x: Array, abft: ABFTConfig,
           out_axes: int = 1) -> Tuple[Array, List[Check]]:
     """y = x @ w (+ b).  x: [..., d_in]; w: [d_in, *out].  The ABFT check runs
-    on the 2-D flattened product — one scalar per call."""
+    on the 2-D flattened product — one scalar per call.
+
+    A folded right checksum ``p["w_r"]`` ([d_in], from ``fold_w_r_tree`` at
+    weight load — the paper's offline eq.-5 convention) is consumed instead
+    of the per-step row-sum of W: the predicted side then comes from the
+    *master* weights, so a post-load weight corruption trips the check (a
+    recomputed row-sum of the corrupted W would cancel it).  A fold whose
+    shape doesn't match this call's flattened layout is ignored, not
+    misapplied."""
     w = p["w"].astype(x.dtype)
     d_in = w.shape[0]
     out_shape = w.shape[1:]
@@ -158,7 +166,10 @@ def dense(p: Params, x: Array, abft: ABFTConfig,
     y2 = x2 @ w2
     checks: List[Check] = []
     if abft.enabled:
-        checks.append(check_matmul(x2, w2, y2, abft))
+        w_r = p.get("w_r")
+        if w_r is not None and w_r.shape != (d_in,):
+            w_r = None
+        checks.append(check_matmul(x2, w2, y2, abft, b_r=w_r))
     y = y2.reshape(*x.shape[:-1], *out_shape)
     if "b" in p:
         y = y + p["b"].astype(y.dtype)

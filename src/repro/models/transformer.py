@@ -24,6 +24,7 @@ from repro.core.abft import ABFTConfig, ABFTReport, Check, merge_reports, summar
 from repro.models.attention import (
     attention_block,
     attention_decode,
+    attention_fault_injection,
     init_attention,
     init_cache,
 )
@@ -534,10 +535,23 @@ def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int
 
 
 def model_prefill(params: Params, cfg: ModelConfig, batch: Dict[str, Array],
-                  abft: ABFTConfig, cache_len: int
+                  abft: ABFTConfig, cache_len: int, *,
+                  return_checks: bool = False,
+                  attn_inject: Optional[Array] = None
                   ) -> Tuple[Array, List[Params], ABFTReport]:
     """Run the prompt, build decode state.  Returns (last-token logits,
-    states, report)."""
+    states, report) — plus the flat per-op Check list when
+    ``return_checks=True`` (the guarded engine's per-op verdict source;
+    scanned segments contribute stacked per-layer checks).
+
+    ``attn_inject`` is an optional scalar *operand*: when given, it is
+    added to element 0 of every attention accumulator O = A·V (the
+    fault-campaign accumulator site).  Pass 0.0 for a fault-free step —
+    the operand form lets a jitted step flip the fault at runtime."""
+    if attn_inject is not None:
+        with attention_fault_injection(attn_inject):
+            return model_prefill(params, cfg, batch, abft, cache_len,
+                                 return_checks=return_checks)
     tokens = batch["tokens"]
     b, t = tokens.shape
     x = embed(params["embed"], tokens, cfg)
@@ -559,13 +573,26 @@ def model_prefill(params: Params, cfg: ModelConfig, batch: Dict[str, Array],
     x = norm_apply(x, params["final_norm"], cfg)
     logits, lc = _lm_head(params, cfg, x[:, -1:], abft)
     checks += lc
-    return logits, states, summarize(_flatten_checks(checks), abft)
+    flat = _flatten_checks(checks)
+    rep = summarize(flat, abft)
+    if return_checks:
+        return logits, states, rep, flat
+    return logits, states, rep
 
 
 def model_decode(params: Params, cfg: ModelConfig, states: List[Params],
-                 tokens: Array, pos: Array, abft: ABFTConfig
+                 tokens: Array, pos: Array, abft: ABFTConfig, *,
+                 return_checks: bool = False,
+                 attn_inject: Optional[Array] = None
                  ) -> Tuple[Array, List[Params], ABFTReport]:
-    """One decode step.  tokens: [B,1]; pos: scalar int32 position."""
+    """One decode step.  tokens: [B,1]; pos: scalar int32 position.
+    ``return_checks=True`` appends the flat per-op Check list;
+    ``attn_inject`` is the attention-accumulator fault operand (see
+    :func:`model_prefill`)."""
+    if attn_inject is not None:
+        with attention_fault_injection(attn_inject):
+            return model_decode(params, cfg, states, tokens, pos, abft,
+                                return_checks=return_checks)
     b = tokens.shape[0]
     x = embed(params["embed"], tokens, cfg)
     if cfg.family == "encdec":
@@ -609,4 +636,8 @@ def model_decode(params: Params, cfg: ModelConfig, states: List[Params],
     x = norm_apply(x, params["final_norm"], cfg)
     logits, lc = _lm_head(params, cfg, x, abft)
     checks += lc
-    return logits, new_states, summarize(_flatten_checks(checks), abft)
+    flat = _flatten_checks(checks)
+    rep = summarize(flat, abft)
+    if return_checks:
+        return logits, new_states, rep, flat
+    return logits, new_states, rep

@@ -133,10 +133,22 @@ class ABFTGuard:
     @staticmethod
     def _flag_sites(metrics, flags: np.ndarray) -> frozenset:
         """The finest available coordinates of this step's flags, as
-        stable string keys: (layer, stripe, slot) when the step carries
+        stable string keys: per-op ids when the step carries op-keyed
+        verdicts (``abft_op_flags`` aligned to the static
+        ``abft_op_ids`` tuple — the checked-op serving paths: LM
+        prefill/decode, GAT), (layer, stripe, slot) when the step carries
         slot corners, (layer, stripe) at stripe granularity, the graph
         slot otherwise.  Capped at 64 sites — a step that floods more
         coordinates than that is a step-wide event, not a stuck cell."""
+        ids = metrics.get("abft_op_ids") if isinstance(metrics, dict) \
+            else None
+        if ids is not None:
+            a = np.asarray(metrics.get("abft_op_flags", False),
+                           dtype=bool).ravel()
+            ids = tuple(ids)
+            if a.any() and a.size == len(ids):
+                return frozenset(f"op:{ids[int(i)]}"
+                                 for i in np.nonzero(a)[0][:64])
         for key, fmt in (("abft_slot_flags",
                           lambda c: "slot:L{}:S{}:E{}".format(*c)),
                          ("abft_stripe_flags",
@@ -183,6 +195,13 @@ class ABFTGuard:
         """step_fn returns (new_state, metrics) where metrics['abft_flag'] is
         the replicated detection scalar.  Returns the adopted (state, metrics)
         — always from a *verified* (unflagged) execution.
+
+        When the metrics carry per-op verdicts (``abft_op_ids`` /
+        ``abft_op_flags``, as emitted by the checked-op serving engines —
+        LM prefill/decode, GAT) the flagged op ids feed the same site
+        history that per-graph serving uses, so a recurring ``op:<id>``
+        site is classified persistent and short-circuits the doomed
+        retries straight to restore-and-replay.
         """
         self.steps += 1
         step_flagged = False
@@ -205,6 +224,14 @@ class ABFTGuard:
             if not step_flagged:
                 step_flagged = True
                 self.flags += 1
+                sites = self._flag_sites(metrics, np.zeros((0,), bool))
+                if sites and self._note_sites(sites):
+                    # a known-persistent site flagged again: retrying the
+                    # same execution path is wasted work
+                    log.error("ABFT: persistent site(s) %s re-flagged — "
+                              "skipping retries, restoring",
+                              sorted(sites & self.persistent_sites))
+                    break
             log.error("ABFT flag on step %d (attempt %d): max_rel=%.3e",
                       self.steps, attempt, float(metrics.get("abft_max_rel", -1)))
         # persistent failure: roll back, replay, and re-verify

@@ -1,0 +1,185 @@
+"""CheckedOp protocol tests (ISSUE 10 tentpole).
+
+The engine's unit of ABFT coverage is a *checked op*: operands + folded
+check vectors in, ``(out, Check)`` at a declared granularity out.  These
+tests pin the protocol contract:
+
+  (a) ``Check`` is a registered pytree whose ``granularity`` is static
+      aux data (survives jit), and its comparisons are NaN-safe — a NaN
+      divergence FLAGS where the naive ``d > tau`` is silent;
+  (b) the reference ops (``MatmulOp`` split eqs. 2–3, ``ChainOp`` fused
+      eqs. 4–6) conform: clean runs unflagged, predicted side computed
+      from inputs + folds only, corruption of the output detected;
+  (c) ``fold_w_r_tree`` is the one offline fold for every surface —
+      flat denses, and layer-stacked transformer segments via
+      ``lead_axes=1``;
+  (d) ``per_op_report`` expands stacked checks into per-layer ids so a
+      flagged op names the layer it fired in;
+  (e) the Pallas ``matmul_abft`` kernel op returns the same registered
+      ``Check`` (granularity aux included), not ad-hoc arrays.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.abft import (
+    ABFTConfig,
+    ChainOp,
+    Check,
+    MatmulOp,
+    check_chain,
+    fold_w_r_tree,
+    per_op_report,
+)
+from repro.kernels.flash_checksum.ops import chain_check
+from repro.kernels.matmul_abft.ops import MatmulAbftOp
+
+CFG = ABFTConfig(mode="fused", threshold=1e-3, relative=True)
+OFF = ABFTConfig(mode="none")
+
+
+def _rand(seed, *shape, scale=0.3):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# (a) Check: registered pytree + NaN-safe comparison
+# ---------------------------------------------------------------------------
+
+def test_check_is_registered_pytree_with_static_granularity():
+    c = Check(predicted=jnp.float32(2.0), actual=jnp.float32(2.0),
+              granularity="stripe")
+    leaves, treedef = jax.tree_util.tree_flatten(c)
+    assert len(leaves) == 2
+    c2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert c2.granularity == "stripe"
+    # granularity is static aux: it crosses the jit boundary untouched
+    c3 = jax.jit(lambda ch: ch)(c)
+    assert c3.granularity == "stripe"
+    assert not bool(c3.flag(CFG))
+
+
+def test_nan_divergence_flags_where_naive_compare_is_silent():
+    c = Check(predicted=jnp.float32(float("nan")), actual=jnp.float32(1.0))
+    d = float(np.abs(np.nan - 1.0))
+    assert not (d > CFG.threshold)          # the naive verdict: silent
+    assert bool(c.flag(CFG))                # the shipped verdict: flags
+    f, _rel = c.elementwise(CFG)
+    assert bool(np.asarray(f).all())
+
+
+# ---------------------------------------------------------------------------
+# (b) reference op conformance
+# ---------------------------------------------------------------------------
+
+def test_matmul_op_clean_and_corrupted():
+    a, b = _rand(0, 24, 16), _rand(1, 16, 8)
+    out, chk = MatmulOp()(CFG, a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a @ b),
+                               atol=1e-5)
+    assert not bool(chk.flag(CFG))
+    # corrupting the served output moves the actual corner off the
+    # prediction (the predicted side never reads the output)
+    bad = np.asarray(out, np.float64).copy()
+    bad[3, 4] += 10.0
+    div = abs(float(chk.predicted) - bad.sum())
+    assert div > CFG.threshold
+    out_off, chk_off = MatmulOp()(OFF, a, b)
+    assert chk_off is None
+    np.testing.assert_array_equal(np.asarray(out_off), np.asarray(out))
+
+
+def test_chain_op_folded_w_r_matches_unfolded():
+    mats = [_rand(2, 20, 12), _rand(3, 12, 10), _rand(4, 10, 6)]
+    out, chk = ChainOp()(CFG, *mats)
+    folded = fold_w_r_tree({"w": mats[-1]}, CFG)
+    out_f, chk_f = ChainOp()(CFG, *mats, w_r=folded["w_r"])
+    np.testing.assert_array_equal(np.asarray(out_f), np.asarray(out))
+    ref = float(np.asarray(out, np.float64).sum())
+    scale = max(1.0, abs(ref))
+    assert abs(float(chk_f.predicted) - float(chk.predicted)) / scale < 1e-5
+    assert abs(float(chk_f.predicted) - ref) / scale < 1e-4
+    assert not bool(chk_f.flag(CFG))
+    # the folded-op check equals the reference eq. 4-6 chain check
+    ref_chk = check_chain(mats, out, CFG)
+    assert abs(float(chk_f.predicted) - float(ref_chk.predicted)) \
+        / scale < 1e-5
+
+
+def test_op_fold_default_is_tree_generic():
+    params = {"w": _rand(5, 14, 6), "b": jnp.zeros(6)}
+    folded = MatmulOp().fold(params, CFG)
+    assert folded["w_r"].shape == (14,)
+    np.testing.assert_allclose(
+        np.asarray(folded["w_r"]),
+        np.asarray(params["w"].astype(CFG.dtype).sum(-1)), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# (c) tree-generic fold: flat + layer-stacked segments
+# ---------------------------------------------------------------------------
+
+def test_fold_w_r_tree_stacked_segments():
+    w = _rand(6, 2, 16, 3, 8)                  # [L, d_in, heads, hd]
+    tree = {"segments": [{"unit0": {"attn": {"wq": {"w": w}},
+                                    "ln": {"scale": jnp.ones((2, 16))}}}]}
+    folded = {"segments": [fold_w_r_tree(s, CFG, lead_axes=1)
+                           for s in tree["segments"]]}
+    wq = folded["segments"][0]["unit0"]["attn"]["wq"]
+    assert wq["w_r"].shape == (2, 16)          # [L, d_in]: per-layer folds
+    np.testing.assert_allclose(
+        np.asarray(wq["w_r"]),
+        np.asarray(w.astype(CFG.dtype).reshape(2, 16, -1).sum(-1)),
+        atol=1e-6)
+    # the 2-D ln scale is below ndim >= 2 + lead_axes: passes untouched
+    assert "w_r" not in folded["segments"][0]["unit0"]["ln"]
+    # disabled config is the identity
+    assert fold_w_r_tree(tree, OFF, lead_axes=1) is tree
+
+
+# ---------------------------------------------------------------------------
+# (d) per-op report: stacked checks name their layer
+# ---------------------------------------------------------------------------
+
+def test_per_op_report_expands_stacked_checks():
+    scalar = Check(predicted=jnp.float32(1.0), actual=jnp.float32(1.0))
+    stacked = Check(predicted=jnp.asarray([2.0, 3.0]),
+                    actual=jnp.asarray([2.0, 3.5]))     # layer 1 corrupted
+    # ids are positional among the PRESENT checks (None = op disabled),
+    # stable across steps of one compiled serving trace
+    ids, flags, rels = per_op_report([scalar, None, stacked], CFG,
+                                     prefix="op")
+    assert ids == ("op0", "op1:L0", "op1:L1")
+    assert np.asarray(flags).tolist() == [False, False, True]
+    assert float(np.asarray(rels)[2]) > CFG.threshold
+
+
+# ---------------------------------------------------------------------------
+# (e) kernel ops return the registered Check
+# ---------------------------------------------------------------------------
+
+def test_matmul_abft_kernel_op_conforms():
+    a, b = _rand(7, 40, 24), _rand(8, 24, 16)
+    op = MatmulAbftOp(block_m=16, block_n=16, block_k=16, interpret=True)
+    out, chk = op(CFG, a, b)
+    assert isinstance(chk, Check) and chk.granularity == "layer"
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a @ b),
+                               atol=1e-4, rtol=1e-4)
+    assert not bool(chk.flag(CFG))
+    # the folded w_r path produces the same clean verdict
+    folded = op.fold({"w": b}, CFG)
+    out2, chk2 = op(CFG, a, b, w_r=folded["w_r"])
+    assert not bool(chk2.flag(CFG))
+    assert op(OFF, a, b)[1] is None
+
+
+def test_flash_chain_check_is_nan_safe_check():
+    o_extra = jnp.asarray([1.0, 2.0, 3.0])
+    out = jnp.asarray([[1.5, 1.5], [1.0, 2.0]])
+    chk = chain_check(o_extra, out)
+    assert isinstance(chk, Check) and chk.granularity == "layer"
+    assert not bool(chk.flag(CFG))
+    bad = chain_check(o_extra, out.at[0, 0].set(jnp.float32(float("nan"))))
+    assert bool(bad.flag(CFG))

@@ -1,0 +1,187 @@
+"""GAT eq. 4–6 tests (ISSUE 10 satellite).
+
+GAT's attention-weighted aggregation is still a three-matrix product
+``H' = A (H W)``, so the paper's fused chain check applies verbatim:
+
+  (a) chain-vs-split parity: the fused single-corner prediction
+      ``s_att · (H w_r)`` equals the split composition's eq. 2–3 check of
+      the last multiply, both matching the f64 reference sum;
+  (b) bit-flip fault-detection sweep mirroring ``tests/test_sparse_abft``:
+      an exponent bit flip in the served output trips the check at the
+      Table I thresholds, sub-threshold deltas stay silent, and clean
+      runs are unflagged;
+  (c) one corner covers BOTH matmuls: corrupting W after the offline
+      fold (the detectable memory-fault class) flags, even though the
+      corruption enters through the inner product H·W;
+  (d) the guarded engine detects an injected accumulator fault in any
+      layer and repairs it through the ABFTGuard ladder end-to-end,
+      returning bit-identical outputs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.abft import ABFTConfig, check_matmul
+from repro.core.fault import THRESHOLDS, flip_bit_f32
+from repro.engine.gat import (
+    GATEngine,
+    fold_gat_w_r,
+    gat_forward,
+    gat_layer,
+    init_gat,
+    make_gat_serve_step,
+)
+from repro.faults.injectors import flip_bits
+
+CFG = ABFTConfig(mode="fused", threshold=1e-3, relative=True)
+DIMS = (12, 16, 8, 4)
+
+
+def random_adj(seed, n, p=0.25):
+    """Symmetric random adjacency with self-loops (nonzero = edge)."""
+    rng = np.random.default_rng(seed)
+    a = rng.random((n, n)) < p
+    a = np.logical_or(a, a.T)
+    np.fill_diagonal(a, True)
+    return jnp.asarray(a.astype(np.float32))
+
+
+def random_inputs(seed, n, f):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.normal(0, 0.5, size=(n, f)).astype(np.float32)),
+            random_adj(seed + 1, n))
+
+
+def _att(p, h):
+    """The layer's attention matrix, recomputed reference-style."""
+    x = h @ p["w"].astype(h.dtype)
+    scores = (x @ p["a_l"].astype(x.dtype))[:, None] \
+        + (x @ p["a_r"].astype(x.dtype))[None, :]
+    return x, jax.nn.leaky_relu(scores, 0.2)
+
+
+# ---------------------------------------------------------------------------
+# (a) chain == split composition
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,n", [(0, 24), (1, 48), (2, 96)])
+def test_chain_equals_split_composition(seed, n):
+    params = init_gat(jax.random.PRNGKey(seed), (8, 6))
+    p = params["layers"][0]
+    h, adj = random_inputs(seed + 10, n, 8)
+    out, chk = gat_layer(p, h, adj, CFG)
+    # split composition: eq. 2-3 on the LAST multiply A @ X with its true
+    # left operand (the softmaxed attention matrix)
+    x, scores = _att(p, h)
+    att = jax.nn.softmax(jnp.where(adj > 0, scores, -1e30), axis=-1)
+    np.testing.assert_allclose(np.asarray(att @ x), np.asarray(out),
+                               atol=1e-6)
+    split = check_matmul(att, x, out, CFG)
+    ref = float(np.asarray(out, np.float64).sum())
+    scale = max(1.0, abs(ref))
+    assert abs(float(chk.predicted) - float(split.predicted)) / scale < 1e-4
+    assert abs(float(chk.predicted) - ref) / scale < 1e-4
+    assert not bool(chk.flag(CFG))
+
+
+# ---------------------------------------------------------------------------
+# (b) bit-flip sweep at Table I thresholds
+# ---------------------------------------------------------------------------
+
+def _gat_fault_property(seed, threshold):
+    params = init_gat(jax.random.PRNGKey(seed), (12, 16))
+    # small feature magnitudes keep the f32 accumulation noise of the two
+    # checksum corners under tau/4 at the tightest Table I threshold
+    rng = np.random.default_rng(seed + 20)
+    h = jnp.asarray(rng.normal(0, 0.1, size=(48, 12)).astype(np.float32))
+    adj = random_adj(seed + 21, 48)
+    out, chk = gat_layer(params["layers"][0], h, adj, CFG)
+    clean_div = abs(float(chk.predicted) - float(chk.actual))
+    assert clean_div < threshold / 4, (clean_div, threshold)
+
+    rng = np.random.default_rng(seed)
+    out_np = np.asarray(out).copy()
+    big = np.argwhere(np.abs(out_np) >= 1e-3)
+    assert big.size, "attention collapsed every value below threshold"
+    i, j = big[int(rng.integers(len(big)))]
+    old = out_np[i, j]
+    new = flip_bit_f32(np.float32(old), 27)
+    delta = float(new) - float(old)
+    out_np[i, j] = new
+    div = abs(float(chk.predicted) - float(out_np.astype(np.float64).sum()))
+    assert div > threshold, (div, delta, threshold)
+    assert abs(div - abs(delta)) < max(1e-5 * abs(delta), threshold / 4)
+
+
+@pytest.mark.parametrize("threshold", list(THRESHOLDS[:2]))   # 1e-4, 1e-5
+@pytest.mark.parametrize("seed", [0, 5])
+def test_bitflip_detected(seed, threshold):
+    _gat_fault_property(seed, threshold)
+
+
+def test_small_fault_below_threshold_is_silent():
+    params = init_gat(jax.random.PRNGKey(3), (12, 16))
+    h, adj = random_inputs(30, 48, 12)
+    out, chk = gat_layer(params["layers"][0], h, adj, CFG)
+    bad = np.asarray(out, np.float64).copy()
+    bad[5, 3] += 2e-5                          # below tau = 1e-4
+    assert abs(float(chk.predicted) - bad.sum()) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# (c) one corner covers the inner matmul too
+# ---------------------------------------------------------------------------
+
+def test_weight_corruption_after_fold_flags():
+    params = fold_gat_w_r(init_gat(jax.random.PRNGKey(4), (12, 16)), CFG)
+    h, adj = random_inputs(40, 48, 12)
+    p = dict(params["layers"][0])
+    assert p["w_r"].shape == (12,)
+    p["w"] = jnp.asarray(flip_bits(np.asarray(p["w"]), 37, 30))
+    _out, chk = gat_layer(p, h, adj, CFG)      # w_r predates the corruption
+    assert bool(chk.flag(CFG))
+
+
+def test_multilayer_forward_clean_and_injected():
+    params = fold_gat_w_r(init_gat(jax.random.PRNGKey(5), DIMS), CFG)
+    h, adj = random_inputs(50, 40, DIMS[0])
+    _out, checks = gat_forward(params, h, adj, CFG)
+    assert len(checks) == len(DIMS) - 1
+    assert not any(bool(c.flag(CFG)) for c in checks)
+    for target in range(len(DIMS) - 1):
+        _out, checks = gat_forward(params, h, adj, CFG,
+                                   inject_layer=target, inject_delta=7.0)
+        flagged = [i for i, c in enumerate(checks) if bool(c.flag(CFG))]
+        assert flagged == [target]
+
+
+# ---------------------------------------------------------------------------
+# (d) the guarded engine end-to-end
+# ---------------------------------------------------------------------------
+
+def test_engine_detects_and_repairs_injected_fault():
+    eng = GATEngine.init(CFG, jax.random.PRNGKey(6), DIMS)
+    h, adj = random_inputs(60, 40, DIMS[0])
+    ref, m = eng.forward(h, adj)
+    assert eng.guard.flags == 0
+    assert m["abft_op_ids"] == tuple(f"gat{i}" for i in range(len(DIMS) - 1))
+    for layer in range(len(DIMS) - 1):
+        flags0, retries0 = eng.guard.flags, eng.guard.retries
+        out, m = eng.forward(h, adj, inject_layer=layer, inject_delta=9.0)
+        assert eng.guard.flags == flags0 + 1
+        assert eng.guard.retries == retries0 + 1       # transient: retried
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    stats = eng.stats()
+    assert stats["flags"] == len(DIMS) - 1 and stats["restores"] == 0
+
+
+def test_serve_step_per_op_verdicts():
+    params = fold_gat_w_r(init_gat(jax.random.PRNGKey(7), DIMS), CFG)
+    h, adj = random_inputs(70, 32, DIMS[0])
+    step = make_gat_serve_step(CFG)
+    _out, m = step(params, h, adj)
+    assert m["abft_op_ids"] == ("gat0", "gat1", "gat2")
+    assert not np.asarray(m["abft_op_flags"]).any()
+    _out, m = step(params, h, adj, inject_layer=1, inject_delta=9.0)
+    assert np.asarray(m["abft_op_flags"]).tolist() == [False, True, False]
